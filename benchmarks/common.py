@@ -1,0 +1,182 @@
+"""Shared benchmark context: per-dataset tuned indexes + measured costs.
+
+Reproduces the paper's measurement methodology at reduced scale (Sec. 3):
+  * E2LSH(oS): build the bucket-block index, measure in-memory query time
+    (= T_compute for the cost model) and the N_io probe trace;
+  * SRS / QALSH: in-memory implementations tuned to a comparable overall
+    ratio; their measured query times are the T_target values of Sec. 4.4.
+
+Results are cached to benchmarks/_cache/<dataset>.npz so the full harness
+(`python -m benchmarks.run`) is re-runnable quickly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import build_qalsh, build_srs, qalsh_query, srs_query
+from repro.core import E2LSHoS, measured_query, overall_ratio
+from repro.data import make_dataset
+
+CACHE = pathlib.Path(__file__).parent / "_cache"
+
+# per-dataset knobs (reduced-n analogues of the paper's Sec. 3.3 tuning);
+# L caps follow Table 4's relative ordering
+TUNING = {
+    "msong":  dict(gamma=0.42, s_scale=8.0, max_L=16),
+    "sift":   dict(gamma=0.70, s_scale=2.0, max_L=25),
+    "gist":   dict(gamma=0.70, s_scale=2.0, max_L=32),
+    "rand":   dict(gamma=0.55, s_scale=4.0, max_L=48),
+    "glove":  dict(gamma=0.65, s_scale=3.0, max_L=48),
+    "gauss":  dict(gamma=0.50, s_scale=4.0, max_L=19),
+    "mnist":  dict(gamma=0.48, s_scale=8.0, max_L=18),
+    "bigann": dict(gamma=0.70, s_scale=2.0, max_L=48),
+}
+
+SRS_TPRIME = {
+    "msong": 256, "sift": 400, "gist": 512, "rand": 2048, "glove": 1024,
+    "gauss": 2048, "mnist": 256, "bigann": 400,
+}
+
+DEFAULT_DATASETS = ("msong", "sift", "gist", "rand", "glove", "gauss",
+                    "mnist", "bigann")
+
+
+@dataclasses.dataclass
+class DatasetBench:
+    name: str
+    n: int
+    d: int
+    # E2LSH measurements
+    e2lsh_params: dict
+    t_e2lsh: float            # measured in-memory query time (s/query)
+    ratio_e2lsh: float
+    nio_mean: float           # N_io at the native 512 B block size
+    nio_inf: float            # N_io with B = inf (Table 4)
+    radii_mean: float
+    cands_mean: float
+    probe_sizes: np.ndarray   # [Q, r, L]
+    s_cap: int
+    # baselines
+    t_srs: float
+    ratio_srs: float
+    srs_checked: float
+    t_qalsh: float
+    ratio_qalsh: float
+    # memory accounting (Table 6)
+    index_storage: int
+    dram_usage: int
+    dram_index: int
+    srs_index_bytes: int
+    db_bytes: int
+    # top-k variants {k: (t_e2lsh, nio, ratio, t_srs)}
+    topk: dict
+
+
+def _measure_srs(ds, t_prime, k=1, repeats=3):
+    srs = build_srs(ds.db, m=8)
+    ids, d, checked = srs_query(srs, ds.queries, k=k, t_prime=t_prime)
+    jax.block_until_ready(d)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        ids, d, checked = srs_query(srs, ds.queries, k=k, t_prime=t_prime)
+        jax.block_until_ready(d)
+    dt = (time.perf_counter() - t0) / repeats / ds.queries.shape[0]
+    ratio = overall_ratio(np.asarray(d), ds.gt_dists[:, :k])
+    return srs, dt, ratio, float(np.mean(np.asarray(checked)))
+
+
+def build_bench(name: str, *, n: int = 16000, n_queries: int = 48,
+                seed: int = 0, with_qalsh: bool = True) -> DatasetBench:
+    from repro.core.io_count import nio_for_block_size, nio_infinity
+
+    ds = make_dataset(name, n=n, n_queries=n_queries, seed=seed)
+    cfg = TUNING[name]
+    idx = E2LSHoS.build(ds.db, gamma=cfg["gamma"], s_scale=cfg["s_scale"],
+                        max_L=cfg["max_L"], seed=seed)
+    # timing with narrow gather chunks (wall-clock knob only); storage-block
+    # I/O is replayed from the probe trace at the paper's 512 B granularity
+    mq = measured_query(idx, ds.queries, k=1, repeats=3,
+                        collect_probe_sizes=True, block_objs=22)
+    ratio = overall_ratio(np.asarray(mq.result.dists), ds.gt_dists[:, :1])
+    probe = np.asarray(mq.result.probe_sizes)
+    nio_inf = float(np.mean(nio_infinity(probe)))
+    nio_512 = float(np.mean(nio_for_block_size(probe, idx.params.S, 512)))
+
+    srs, t_srs, ratio_srs, checked = _measure_srs(ds, SRS_TPRIME[name])
+
+    t_qalsh, ratio_qalsh = float("nan"), float("nan")
+    if with_qalsh:
+        q = build_qalsh(ds.db, K=64)
+        nq_q = min(16, n_queries)  # QALSH is slow; per-query time from a subset
+        t0 = time.perf_counter()
+        _, dq, _, _ = qalsh_query(q, ds.queries[:nq_q], k=1)
+        t_qalsh = (time.perf_counter() - t0) / nq_q
+        ratio_qalsh = overall_ratio(dq, ds.gt_dists[:nq_q, :1])
+
+    fp = idx.footprint()
+
+    topk = {}
+    for k in (10,):
+        mqk = measured_query(idx, ds.queries, k=k, repeats=2,
+                             collect_probe_sizes=True, block_objs=22)
+        rk = overall_ratio(np.asarray(mqk.result.dists), ds.gt_dists[:, :k])
+        nio_k = float(np.mean(nio_for_block_size(
+            np.asarray(mqk.result.probe_sizes), idx.params.S, 512)))
+        _, t_srs_k, ratio_srs_k, _ = _measure_srs(ds, SRS_TPRIME[name] * 2, k=k,
+                                                  repeats=2)
+        topk[k] = dict(t_e2lsh=mqk.t_compute_per_query, nio=nio_k,
+                       ratio=rk, t_srs=t_srs_k, ratio_srs=ratio_srs_k)
+
+    p = idx.params
+    return DatasetBench(
+        name=name, n=n, d=ds.db.shape[1],
+        e2lsh_params=dict(m=p.m, L=p.L, S=p.S, r=p.r, u=p.u, w=p.w,
+                          rho=p.rho, gamma=p.gamma),
+        t_e2lsh=mq.t_compute_per_query, ratio_e2lsh=ratio,
+        nio_mean=nio_512, nio_inf=nio_inf, radii_mean=mq.radii_mean,
+        cands_mean=mq.cands_mean, probe_sizes=probe, s_cap=p.S,
+        t_srs=t_srs, ratio_srs=ratio_srs, srs_checked=checked,
+        t_qalsh=t_qalsh, ratio_qalsh=ratio_qalsh,
+        index_storage=fp.index_on_storage, dram_usage=fp.dram_usage,
+        dram_index=fp.dram_index_part, srs_index_bytes=srs.index_bytes,
+        db_bytes=fp.db_bytes, topk=topk,
+    )
+
+
+def _cache_path(name, n, seed):
+    return CACHE / f"{name}_n{n}_s{seed}.npz"
+
+
+def get_bench(name: str, *, n: int = 16000, seed: int = 0,
+              refresh: bool = False) -> DatasetBench:
+    CACHE.mkdir(exist_ok=True)
+    path = _cache_path(name, n, seed)
+    if path.exists() and not refresh:
+        z = np.load(path, allow_pickle=True)
+        d = z["bench"][0]
+        d["probe_sizes"] = z["probe_sizes"]
+        return DatasetBench(**d)
+    b = build_bench(name, n=n, seed=seed)
+    d = dataclasses.asdict(b)
+    probe = d.pop("probe_sizes")
+    np.savez_compressed(path, bench=np.array([d], dtype=object),
+                        probe_sizes=probe)
+    return b
+
+
+def get_all(datasets=DEFAULT_DATASETS, **kw) -> Dict[str, DatasetBench]:
+    return {name: get_bench(name, **kw) for name in datasets}
+
+
+def emit(rows, header=("name", "us_per_call", "derived")):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,31 @@
+"""Figs. 11/12: E2LSHoS speedup over SRS for each storage configuration
+(Table 5 device x interface groups), from the Eq. 7 model with measured
+T_compute and N_io. Reproduces the six-group ordering of Fig. 11:
+cSSDx1 < io_uring-bound < cSSDx4+SPDK < eSSD+SPDK < in-memory <= XLFDD."""
+from __future__ import annotations
+
+from repro.core.storage import TABLE5_CONFIGS, t_async
+from .common import emit, get_bench
+
+
+def run(benches=None):
+    b = (benches or {}).get("sift") or get_bench("sift")
+    t_compute = 0.9 * b.t_e2lsh  # Sec. 4.5 memory-stall correction
+    rows = []
+    for cfg in TABLE5_CONFIGS:
+        t = t_async(t_compute, b.nio_mean, cfg)
+        rows.append((
+            f"fig11.sift.{cfg.name}",
+            f"{t * 1e6:.1f}",
+            f"speedup_vs_srs={b.t_srs / t:.1f};"
+            f"cpu_lane_us={(t_compute + b.nio_mean * cfg.interface.t_request)*1e6:.1f};"
+            f"storage_lane_us={b.nio_mean / cfg.total_iops * 1e6:.1f}",
+        ))
+    rows.append((f"fig11.sift.in-memory", f"{b.t_e2lsh*1e6:.1f}",
+                 f"speedup_vs_srs={b.t_srs / b.t_e2lsh:.1f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Fig. 13: E2LSHoS speedups over SRS across all datasets, k=1 and k=10,
+for three storage setups (cSSDx4+io_uring, cSSDx4+SPDK, XLFDDx12)."""
+from __future__ import annotations
+
+from repro.core.storage import DEVICES, INTERFACES, StorageConfig, t_async
+from .common import emit, get_all
+
+SETUPS = [
+    StorageConfig(DEVICES["cssd"], 4, INTERFACES["io_uring"]),
+    StorageConfig(DEVICES["cssd"], 4, INTERFACES["spdk"]),
+    StorageConfig(DEVICES["xlfdd"], 12, INTERFACES["xlfdd"]),
+]
+
+
+def run(benches=None):
+    benches = benches or get_all()
+    rows = []
+    for name, b in benches.items():
+        for setup in SETUPS:
+            t = t_async(0.9 * b.t_e2lsh, b.nio_mean, setup)
+            rows.append((f"fig13.k1.{name}.{setup.name}", f"{t*1e6:.1f}",
+                         f"speedup_vs_srs={b.t_srs / t:.1f}"))
+        for k, info in b.topk.items():
+            setup = SETUPS[-1]
+            t = t_async(0.9 * info["t_e2lsh"], info["nio"], setup)
+            rows.append((f"fig13.k{k}.{name}.{setup.name}", f"{t*1e6:.1f}",
+                         f"speedup_vs_srs={info['t_srs'] / t:.1f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Fig. 14: query time vs database size n — E2LSH(oS) grows sublinearly
+(fit exponent < 1) while SRS grows ~linearly. Uses BIGANN-like data at
+doubling n; E2LSHoS modeled on XLFDDx12 per Eq. 7."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.storage import DEVICES, INTERFACES, StorageConfig, t_async
+from .common import DatasetBench, build_bench, emit
+
+NS = (8000, 16000, 32000, 64000, 128000, 256000)
+XL = StorageConfig(DEVICES["xlfdd"], 12, INTERFACES["xlfdd"])
+
+
+def run(benches=None, ns=NS):
+    import json
+    import pathlib
+    cache = pathlib.Path(__file__).parent / "_cache" / "fig14.json"
+    if cache.exists():
+        data = json.loads(cache.read_text())
+    else:
+        data = []
+        for n in ns:
+            b = build_bench("bigann", n=n, with_qalsh=False)
+            data.append(dict(n=n, t_e2lsh=b.t_e2lsh, nio=b.nio_mean,
+                             t_srs=b.t_srs, ratio=b.ratio_e2lsh,
+                             ratio_srs=b.ratio_srs))
+        cache.parent.mkdir(exist_ok=True)
+        cache.write_text(json.dumps(data))
+
+    rows = []
+    for d in data:
+        t_os = t_async(0.9 * d["t_e2lsh"], d["nio"], XL)
+        rows.append((f"fig14.bigann.n{d['n']}", f"{t_os*1e6:.1f}",
+                     f"t_e2lsh_us={d['t_e2lsh']*1e6:.1f};"
+                     f"t_srs_us={d['t_srs']*1e6:.1f};nio={d['nio']:.0f}"))
+    # sublinearity fit: slope of log(t) vs log(n)
+    ln = np.log([d["n"] for d in data])
+    sl_os = np.polyfit(ln, np.log([t_async(0.9*d["t_e2lsh"], d["nio"], XL)
+                                   for d in data]), 1)[0]
+    sl_srs = np.polyfit(ln, np.log([d["t_srs"] for d in data]), 1)[0]
+    rows.append(("fig14.fit", "",
+                 f"e2lshos_exponent={sl_os:.2f};srs_exponent={sl_srs:.2f};"
+                 f"sublinear={'yes' if sl_os < min(1.0, sl_srs) else 'no'}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Fig. 15 (device scaling) and Fig. 16 (multithreading), from the Eq. 7
+model: query speed is proportional to aggregate IOPS until the CPU lane
+binds (Fig. 15); thread scaling is linear until storage IOPS saturates
+(Fig. 16) — E2LSHoS on cSSD plateaus, on XLFDD keeps scaling."""
+from __future__ import annotations
+
+from repro.core.storage import DEVICES, INTERFACES, StorageConfig, t_async
+from .common import emit, get_bench
+
+
+def run(benches=None):
+    b = (benches or {}).get("sift") or get_bench("sift")
+    t_compute = 0.9 * b.t_e2lsh
+    rows = []
+    # Fig. 15: cSSD count sweep (single thread)
+    for count in (1, 2, 4, 8):
+        cfg = StorageConfig(DEVICES["cssd"], count, INTERFACES["io_uring"])
+        t = t_async(t_compute, b.nio_mean, cfg)
+        qps = 1.0 / t
+        usage = min(1.0, (qps * b.nio_mean) / cfg.total_iops)
+        rows.append((f"fig15.sift.cssd_x{count}", f"{t*1e6:.1f}",
+                     f"qps={qps:.0f};device_usage={usage:.2f}"))
+    # Fig. 16: thread sweep on cSSDx4 and XLFDDx12
+    for dev, count, iface in (("cssd", 4, "io_uring"), ("xlfdd", 12, "xlfdd")):
+        cfg = StorageConfig(DEVICES[dev], count, INTERFACES[iface])
+        for threads in (1, 2, 4, 8, 16, 32):
+            cpu_lane = (t_compute + b.nio_mean * cfg.interface.t_request) / threads
+            storage_lane = b.nio_mean / cfg.total_iops
+            t = max(cpu_lane, storage_lane)
+            srs_qps = threads / b.t_srs
+            rows.append((
+                f"fig16.sift.{dev}x{count}.t{threads}", f"{t*1e6:.1f}",
+                f"qps={1.0/t:.0f};srs_qps={srs_qps:.0f};"
+                f"bound={'storage' if storage_lane > cpu_lane else 'cpu'}",
+            ))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

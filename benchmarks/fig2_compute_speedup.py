@@ -1,0 +1,28 @@
+"""Fig. 2: in-memory E2LSH query-time speedup over SRS and QALSH.
+
+Observation 1: E2LSH's computational cost is much smaller (often 1-2 orders
+of magnitude) than the small-index methods at matched accuracy."""
+from __future__ import annotations
+
+from .common import emit, get_all
+
+
+def run(benches=None):
+    benches = benches or get_all()
+    rows = []
+    for name, b in benches.items():
+        s_srs = b.t_srs / b.t_e2lsh
+        s_qalsh = b.t_qalsh / b.t_e2lsh if b.t_qalsh == b.t_qalsh else float("nan")
+        rows.append((
+            f"fig2.{name}",
+            f"{b.t_e2lsh * 1e6:.1f}",
+            f"speedup_vs_srs={s_srs:.1f};speedup_vs_qalsh={s_qalsh:.1f};"
+            f"ratio_e2lsh={b.ratio_e2lsh:.3f};ratio_srs={b.ratio_srs:.3f};"
+            f"ratio_qalsh={b.ratio_qalsh:.3f}",
+        ))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

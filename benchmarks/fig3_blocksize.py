@@ -1,0 +1,30 @@
+"""Fig. 3: average N_io per query vs read block size B (SIFT), replayed from
+the recorded probe trace at several candidate budgets (accuracy knob)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.io_count import nio_for_block_size
+from .common import emit, get_bench
+
+BLOCKS = (128, 512, 4096, 1 << 30)
+
+
+def run(benches=None):
+    b = (benches or {}).get("sift") or get_bench("sift")
+    rows = []
+    # sequential bucket reads (the paper's single-query loop, Sec. 5.4)
+    for s_mult, label in ((0.5, "lo_acc"), (1.0, "default"), (4.0, "hi_acc")):
+        s_cap = max(1, int(b.s_cap * s_mult))
+        for B in BLOCKS:
+            nio = float(np.mean(nio_for_block_size(b.probe_sizes, s_cap, B,
+                                                   order="sequential")))
+            tag = "inf" if B >= 1 << 30 else str(B)
+            rows.append((f"fig3.sift.B{tag}.{label}", "",
+                         f"nio={nio:.1f};s_cap={s_cap}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

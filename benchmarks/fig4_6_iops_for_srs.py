@@ -1,0 +1,50 @@
+"""Figs. 4-6: storage IOPS required for E2LSHoS to match in-memory SRS
+(Eqs. 12/13), per block size (Fig. 4, SIFT), per dataset at B=512 (Fig. 5),
+and for top-k (Fig. 6). Observation 3: a few hundred kIOPS suffices — one
+cSSD at queue depth 128 (273 kIOPS) clears it."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.io_count import nio_for_block_size
+from repro.core.storage import DEVICES, required_iops_async, required_request_rate_async
+from .common import emit, get_all
+
+
+def run(benches=None):
+    benches = benches or get_all()
+    rows = []
+    cssd = DEVICES["cssd"].iops_qd128
+
+    # Fig. 4: per block size (SIFT; sequential-read replay per the paper)
+    b = benches["sift"]
+    for B in (128, 512, 4096):
+        nio = float(np.mean(nio_for_block_size(b.probe_sizes, b.s_cap, B,
+                                               order="sequential")))
+        req = required_iops_async(b.t_srs, nio)
+        rows.append((f"fig4.sift.B{B}", "",
+                     f"required_kiops={req/1e3:.0f};nio={nio:.0f}"))
+
+    # Fig. 5: per dataset at B = 512
+    for name, bb in benches.items():
+        req = required_iops_async(bb.t_srs, bb.nio_mean)
+        req_rate = required_request_rate_async(bb.t_srs, bb.t_e2lsh, bb.nio_mean)
+        rows.append((
+            f"fig5.{name}", "",
+            f"required_kiops={req/1e3:.0f};"
+            f"required_req_rate_kiops={req_rate/1e3:.0f};"
+            f"cssd_meets={'yes' if req < cssd else 'no'}",
+        ))
+
+    # Fig. 6: top-k
+    for name, bb in benches.items():
+        for k, info in bb.topk.items():
+            req = required_iops_async(info["t_srs"], info["nio"])
+            rows.append((f"fig6.{name}.k{k}", "",
+                         f"required_kiops={req/1e3:.0f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Figs. 7-8: requirements to reach in-memory E2LSH speeds (Eqs. 14-16).
+Observation 4: a few MIOPS random read + tens-of-ns CPU overhead per I/O."""
+from __future__ import annotations
+
+from repro.core.storage import (DEVICES, INTERFACES,
+                                inmem_request_rate_requirement,
+                                required_iops_async)
+from .common import emit, get_all
+
+
+def run(benches=None):
+    benches = benches or get_all()
+    rows = []
+    for name, b in benches.items():
+        iops_req = required_iops_async(b.t_e2lsh, b.nio_mean)       # Eq. 15
+        rate_req = inmem_request_rate_requirement(b.t_e2lsh, b.nio_mean)  # Eq. 16
+        t_req_ns = 1e9 / rate_req
+        rows.append((
+            f"fig7.{name}", "",
+            f"required_miops={iops_req/1e6:.2f};"
+            f"t_request_budget_ns={t_req_ns:.0f};"
+            f"essd_meets={'yes' if iops_req < DEVICES['essd'].iops_qd128 else 'no'};"
+            f"xlfdd_iface_meets={'yes' if 1e-9*t_req_ns > INTERFACES['xlfdd'].t_request else 'no'}",
+        ))
+    for name, b in benches.items():
+        for k, info in b.topk.items():
+            iops_req = required_iops_async(info["t_e2lsh"], info["nio"])
+            rows.append((f"fig8.{name}.k{k}", "",
+                         f"required_miops={iops_req/1e6:.2f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,142 @@
+"""Roofline analysis from the dry-run's compiled artifacts.
+
+Per (arch x shape x mesh) cell:
+    compute term    = HLO_FLOPs / (chips * 197 TFLOP/s bf16)
+    memory term     = HLO_bytes / (chips * 819 GB/s)
+    collective term = collective_bytes / (chips * 50 GB/s/link)
+
+cost_analysis() of the SPMD-partitioned module reports per-device numbers,
+so terms divide by per-chip rates directly.
+
+Two corrections for CPU-backend cost-model artifacts (see EXPERIMENTS.md):
+  * scan bodies are counted once regardless of trip count -> we prefer the
+    *depth-extrapolated* records (dryrun --extrapolate: unrolled 1- and
+    2-unit lowerings, linear fit to full depth);
+  * XLA's "bytes accessed" charges a gather/embedding op the FULL operand
+    array, so gather-heavy cells inflate -> we also report a streaming
+    lower bound t_mem_stream = (argument + output bytes) / HBM_bw (weights +
+    caches + activations actually resident), taken from memory_analysis().
+
+MODEL_FLOPS = 6*N*D for training steps (fwd+bwd) and 2*N*D for serving
+steps, N = active params (MoE), D = tokens processed by the step.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.models.config import SHAPES
+
+PEAK_FLOPS = 197e12      # bf16 per chip (TPU v5e-class)
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link (1 link assumed; conservative)
+
+HERE = pathlib.Path(__file__).parent.parent
+RESULTS = HERE / "dryrun_results.jsonl"
+RESULTS_EXTRAP = HERE / "dryrun_extrapolated.jsonl"
+
+
+def load_records(path=RESULTS):
+    if not pathlib.Path(path).exists():
+        return []
+    return [json.loads(l) for l in open(path) if l.strip()]
+
+
+def merged_records(plain_path=RESULTS, extrap_path=RESULTS_EXTRAP):
+    """Prefer extrapolated cost/collectives; keep memory_analysis from the
+    scanned full lowering (that one reflects the real buffers)."""
+    plain = {(r["arch"], r["shape"], r["mesh"]): r for r in load_records(plain_path)}
+    out = dict(plain)
+    for r in load_records(extrap_path):
+        key = (r["arch"], r["shape"], r["mesh"])
+        if r.get("status") != "OK":
+            continue
+        base = dict(plain.get(key, {}))
+        base.update({k: v for k, v in r.items() if k != "memory"})
+        if "memory" in plain.get(key, {}):
+            base["memory"] = plain[key]["memory"]
+        out[key] = base
+    return list(out.values())
+
+
+def analyze(rec):
+    if rec.get("status") != "OK":
+        return None
+    cost = rec.get("cost", {})
+    flops = cost.get("flops", 0.0)
+    bytes_acc = cost.get("bytes accessed", 0.0)
+    coll = rec.get("collectives", {}).get("total", 0)
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll / ICI_BW
+    mem = rec.get("memory", {}) or {}
+    arg_b = mem.get("argument_bytes") or 0
+    out_b = mem.get("output_bytes") or 0
+    t_mem_stream = (arg_b + out_b) / HBM_BW if (arg_b or out_b) else None
+    analytic = rec.get("analytic_bytes_per_chip")
+    if analytic:
+        t_mem_stream = analytic / HBM_BW
+    # bound/dominance: compute & collective from the compiled HLO (reliable);
+    # memory from the streaming bound (the HLO per-op byte count is the
+    # unfused upper bound — reported as tm for reference)
+    terms = {"compute": t_compute,
+             "memory": t_mem_stream if t_mem_stream is not None else t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    t_bound = max(terms.values())
+    shape = rec.get("shape", "")
+    model_flops = None
+    ratio = None
+    if shape in SHAPES:
+        spec = SHAPES[shape]
+        n_active = rec.get("active_params") or rec.get("params") or 0
+        tokens = spec.global_batch * (spec.seq_len if spec.kind != "decode" else 1)
+        mult = 6 if spec.kind == "train" else 2
+        model_flops = mult * n_active * tokens
+        total_hlo = flops * chips
+        ratio = model_flops / total_hlo if total_hlo else None
+    mfu_bound = None
+    if model_flops and t_bound > 0:
+        mfu_bound = (model_flops / chips / t_bound) / PEAK_FLOPS
+    return dict(
+        arch=rec["arch"], shape=shape, mesh=rec["mesh"], chips=chips,
+        t_compute=t_compute, t_memory=t_memory, t_collective=t_coll,
+        t_mem_stream=t_mem_stream,
+        dominant=dominant, step_time_bound=t_bound,
+        model_flops=model_flops, hlo_flops_per_chip=flops,
+        bytes_per_chip=bytes_acc, collective_bytes_per_chip=coll,
+        useful_flops_ratio=ratio, mfu_at_bound=mfu_bound,
+        extrapolated=bool(rec.get("extrapolated")),
+        collectives=rec.get("collectives", {}),
+        memory=mem,
+    )
+
+
+def run(benches=None, plain_path=RESULTS, extrap_path=RESULTS_EXTRAP):
+    rows = []
+    print("name,us_per_call,derived")
+    for rec in merged_records(plain_path, extrap_path):
+        a = analyze(rec)
+        if a is None:
+            if rec.get("status") == "SKIP":
+                print(f"roofline.{rec['arch']}.{rec['shape']}.{rec['mesh']},,SKIP")
+            continue
+        ur = a["useful_flops_ratio"]
+        mb = a["mfu_at_bound"]
+        ts = a["t_mem_stream"]
+        derived = (f"dom={a['dominant']};tc_ms={a['t_compute']*1e3:.2f};"
+                   f"tm_ms={a['t_memory']*1e3:.2f};"
+                   f"tm_stream_ms={'' if ts is None else round(ts*1e3,2)};"
+                   f"tx_ms={a['t_collective']*1e3:.3f};"
+                   f"useful_ratio={'' if ur is None else round(ur,3)};"
+                   f"mfu_bound={'' if mb is None else round(mb,3)};"
+                   f"extrap={'y' if a['extrapolated'] else 'n'}")
+        name = f"roofline.{a['arch']}.{a['shape']}.{a['mesh']}"
+        print(f"{name},{a['step_time_bound']*1e6:.0f},{derived}")
+        rows.append(a)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

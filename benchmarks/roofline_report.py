@@ -1,0 +1,42 @@
+"""Render the §Roofline markdown table for EXPERIMENTS.md from the dry-run
+records (depth-extrapolated where available)."""
+from __future__ import annotations
+
+from .roofline import analyze, merged_records, PEAK_FLOPS
+
+
+def render(single_pod_only: bool = True) -> str:
+    rows = []
+    for rec in merged_records():
+        if single_pod_only and rec.get("mesh") != "16x16":
+            continue
+        a = analyze(rec)
+        if a is None:
+            if rec.get("status") == "SKIP":
+                rows.append(f"| {rec['arch']} | {rec['shape']} | SKIP | | | | | | | |")
+            continue
+        ur = a["useful_flops_ratio"]
+        mb = a["mfu_at_bound"]
+        ts = a["t_mem_stream"]
+        one_line = {
+            "compute": "raise useful-flops ratio (less remat recompute)",
+            "memory": "cut resident bytes (weight/cache dtype, layout)",
+            "collective": "shrink gathered bytes (bf16 gathers, reduce-scatter, local dispatch)",
+        }[a["dominant"]]
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['dominant']} | "
+            f"{a['t_compute']*1e3:.1f} | "
+            f"{'' if ts is None else f'{ts*1e3:.1f}'} | "
+            f"{a['t_memory']*1e3:.0f} | "
+            f"{a['t_collective']*1e3:.1f} | "
+            f"{'' if ur is None else f'{ur:.2f}'} | "
+            f"{'' if mb is None else f'{mb:.3f}'} | {one_line} |")
+    header = (
+        "| arch | shape | bottleneck | t_compute ms | t_mem(stream) ms | "
+        "t_mem(HLO) ms | t_collective ms | MODEL/HLO flops | roofline frac @bound | what moves it |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n")
+    return header + "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(render())

@@ -1,0 +1,80 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--datasets sift,gist]
+
+Prints ``name,us_per_call,derived`` CSV blocks per artifact. The shared
+measurement context (per-dataset indexes, baselines) is cached under
+benchmarks/_cache/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", default=None,
+                    help="comma list (default: all eight)")
+    ap.add_argument("--n", type=int, default=128000)
+    ap.add_argument("--quick", action="store_true",
+                    help="sift+gauss only, skip fig14 sweep")
+    ap.add_argument("--refresh", action="store_true")
+    args = ap.parse_args(argv)
+
+    from . import common
+    if args.quick:
+        names = ("sift", "gauss")
+    elif args.datasets:
+        names = tuple(args.datasets.split(","))
+    else:
+        names = common.DEFAULT_DATASETS
+
+    t0 = time.time()
+    print(f"# building/loading context for {names} (n={args.n})", flush=True)
+    benches = {}
+    for nm in names:
+        t1 = time.time()
+        benches[nm] = common.get_bench(nm, n=args.n, refresh=args.refresh)
+        print(f"#   {nm}: {time.time()-t1:.1f}s "
+              f"(ratio={benches[nm].ratio_e2lsh:.3f})", flush=True)
+
+    from . import (fig2_compute_speedup, fig3_blocksize, fig4_6_iops_for_srs,
+                   fig7_8_iops_for_inmem, fig11_storage_configs,
+                   fig13_speedups, fig14_sublinearity, fig15_16_scaling,
+                   roofline, sync_vs_async, table4_io_count, table6_memory)
+
+    sections = [
+        ("Table 4 (I/O counts)", table4_io_count),
+        ("Fig. 2 (compute speedup)", fig2_compute_speedup),
+        ("Fig. 3 (block size)", fig3_blocksize),
+        ("Figs. 4-6 (IOPS for SRS speed)", fig4_6_iops_for_srs),
+        ("Figs. 7-8 (IOPS for in-memory speed)", fig7_8_iops_for_inmem),
+        ("Figs. 11/12 (storage configs)", fig11_storage_configs),
+        ("Fig. 13 (speedups over SRS)", fig13_speedups),
+        ("Table 6 (index/memory)", table6_memory),
+        ("Figs. 15/16 (device/thread scaling)", fig15_16_scaling),
+        ("Sec. 6.5 (sync vs async)", sync_vs_async),
+    ]
+    if not args.quick:
+        sections.insert(8, ("Fig. 14 (sublinearity)", fig14_sublinearity))
+
+    for title, mod in sections:
+        print(f"\n## {title}", flush=True)
+        try:
+            mod.run(benches)
+        except Exception as e:  # keep the harness going
+            print(f"# ERROR in {title}: {type(e).__name__}: {e}", flush=True)
+
+    print("\n## Roofline (from dry-run)", flush=True)
+    try:
+        roofline.run(benches)
+    except Exception as e:
+        print(f"# ERROR in roofline: {type(e).__name__}: {e}", flush=True)
+
+    print(f"\n# total {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Sec. 6.5: synchronous (mmap/page-cache) vs asynchronous E2LSHoS.
+The paper measures 19.7x; the model reproduces the order of magnitude."""
+from __future__ import annotations
+
+from repro.core.storage import (DEVICES, INTERFACES, StorageConfig,
+                                mmap_sync_model, t_async, t_sync)
+from .common import emit, get_bench
+
+
+def run(benches=None):
+    b = (benches or {}).get("bigann") or get_bench("bigann")
+    cfg = StorageConfig(DEVICES["cssd"], 4, INTERFACES["io_uring"])
+    t_compute = 0.9 * b.t_e2lsh
+    t_a = t_async(t_compute, b.nio_mean, cfg)
+    t_s = t_sync(t_compute, b.nio_mean, cfg)
+    t_m = mmap_sync_model(t_compute, b.nio_mean, cfg)
+    rows = [
+        ("sync_vs_async.async", f"{t_a*1e6:.1f}", "cssd_x4_io_uring"),
+        ("sync_vs_async.sync_qd1", f"{t_s*1e6:.1f}",
+         f"slowdown={t_s/t_a:.1f}"),
+        ("sync_vs_async.mmap_model", f"{t_m*1e6:.1f}",
+         f"slowdown={t_m/t_a:.1f};paper_reports=19.7"),
+    ]
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

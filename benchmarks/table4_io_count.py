@@ -1,0 +1,26 @@
+"""Table 4: average number of hash-bucket reads per query.
+
+Columns mirror the paper: L, total radii r, average searched radii r-bar,
+and N_io,inf (2 I/Os per non-empty probed bucket, B = inf)."""
+from __future__ import annotations
+
+from .common import DEFAULT_DATASETS, emit, get_all
+
+
+def run(benches=None):
+    benches = benches or get_all()
+    rows = []
+    for name, b in benches.items():
+        rows.append((
+            f"table4.{name}",
+            f"{b.t_e2lsh * 1e6:.1f}",
+            f"L={b.e2lsh_params['L']};r={b.e2lsh_params['r']};"
+            f"rbar={b.radii_mean:.2f};nio_inf={b.nio_inf:.1f};"
+            f"nio_512={b.nio_mean:.1f};ratio={b.ratio_e2lsh:.3f}",
+        ))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Table 6: index size on storage vs runtime DRAM usage — E2LSHoS keeps a
+large index on storage but DRAM comparable to SRS (database + tiny
+index-resident part)."""
+from __future__ import annotations
+
+from .common import emit, get_all
+
+
+def run(benches=None):
+    benches = benches or get_all()
+    rows = []
+    for name, b in benches.items():
+        srs_mem = b.db_bytes + b.srs_index_bytes
+        rows.append((
+            f"table6.{name}", "",
+            f"index_storage_mb={b.index_storage/1e6:.1f};"
+            f"dram_mb={b.dram_usage/1e6:.1f};"
+            f"dram_index_mb={b.dram_index/1e6:.3f};"
+            f"srs_mem_mb={srs_mem/1e6:.1f};"
+            f"srs_index_mb={b.srs_index_bytes/1e6:.2f};"
+            f"storage_to_dram_ratio={b.index_storage/max(b.dram_usage,1):.1f}",
+        ))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

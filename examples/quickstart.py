@@ -1,0 +1,47 @@
+"""Quickstart: the paper in ~60 lines.
+
+Build an E2LSH-on-Storage index over a synthetic SIFT-like dataset, run
+top-k queries, and apply the paper's Sec. 4 analysis: measured T_compute +
+N_io -> which storage devices can serve this index at in-memory speed.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import E2LSHoS, measured_query, overall_ratio
+from repro.core.storage import DEVICES, INTERFACES, StorageConfig, t_async, t_sync
+from repro.data import make_dataset
+
+# 1. data: synthetic stand-in for SIFT (128-d byte vectors), exact GT included
+ds = make_dataset("sift", n=20000, n_queries=64, seed=0)
+
+# 2. build the index (Eq. 5 parameters; bucket blocks + fingerprints)
+index = E2LSHoS.build(ds.db, c=2.0, w=4.0, gamma=0.7, s_scale=2.0, max_L=25)
+p = index.params
+print(f"params: m={p.m} L={p.L} S={p.S} radii={p.r} rho={p.rho:.3f}")
+st = index.index.stats
+print(f"index on storage: {st.index_storage_bytes/1e6:.1f} MB "
+      f"({st.storage_blocks} x {p.block_bytes} B blocks); "
+      f"DRAM bitmap: {st.dram_index_bytes/1e6:.2f} MB")
+
+# 3. query: multi-radius (R, c)-NN with candidate cap S
+mq = measured_query(index, ds.queries, k=1)
+ratio = overall_ratio(np.asarray(mq.result.dists), ds.gt_dists[:, :1])
+print(f"\noverall ratio: {ratio:.4f} (1.0 = exact; paper targets 1.05)")
+print(f"avg radii searched: {mq.radii_mean:.2f}; avg N_io: {mq.nio_mean:.1f}; "
+      f"avg candidates checked: {mq.cands_mean:.1f}")
+print(f"measured T_compute: {mq.t_compute_per_query*1e6:.0f} us/query")
+
+# 4. the paper's storage analysis (Eqs. 6-11): what hardware keeps up?
+print("\nmodeled external-memory query time (async, Eq. 7):")
+for dev, n_dev, iface in (("cssd", 1, "io_uring"), ("cssd", 4, "spdk"),
+                          ("essd", 1, "spdk"), ("xlfdd", 12, "xlfdd")):
+    cfg = StorageConfig(DEVICES[dev], n_dev, INTERFACES[iface])
+    t = t_async(0.9 * mq.t_compute_per_query, mq.nio_mean, cfg)
+    slow = t / mq.t_compute_per_query
+    print(f"  {cfg.name:24s}: {t*1e6:7.1f} us/query "
+          f"({slow:.2f}x in-memory time)")
+cfg = StorageConfig(DEVICES["cssd"], 1, INTERFACES["io_uring"])
+print(f"  sync (QD=1) on one cSSD : "
+      f"{t_sync(mq.t_compute_per_query, mq.nio_mean, cfg)*1e6:7.1f} us/query "
+      f"<- why the paper needs async I/O")

@@ -1,0 +1,26 @@
+"""Train a reduced LM end to end with checkpoint/restart (thin wrapper over
+the production launcher; kill it mid-run and re-invoke to see auto-resume).
+
+    PYTHONPATH=src python examples/train_lm.py --arch h2o-danube-1.8b
+"""
+import argparse
+import sys
+
+from repro.launch import train as train_launcher
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    args = ap.parse_args()
+    train_launcher.main([
+        "--arch", args.arch, "--reduced", "--steps", str(args.steps),
+        "--batch", "8", "--seq", "128", "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "25", "--log-every", "10",
+    ])
+
+
+if __name__ == "__main__":
+    main()

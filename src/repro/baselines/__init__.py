@@ -1,0 +1,6 @@
+from .exact import exact_knn, exact_knn_np
+from .srs import SRSIndex, build_srs, srs_query
+from .qalsh import QALSHIndex, build_qalsh, qalsh_query
+
+__all__ = ["exact_knn", "exact_knn_np", "SRSIndex", "build_srs", "srs_query",
+           "QALSHIndex", "build_qalsh", "qalsh_query"]

@@ -1,0 +1,60 @@
+"""Brute-force exact k-NN (ground truth for overall-ratio evaluation)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["exact_knn", "exact_knn_np"]
+
+
+@partial(jax.jit, static_argnames=("k", "block"))
+def _exact_block(db, db_n2, q, k, block):
+    qn2 = jnp.sum(q * q, axis=-1)
+    n = db.shape[0]
+    nblk = -(-n // block)
+
+    def body(i, carry):
+        best_d, best_i = carry
+        start = i * block
+        x = jax.lax.dynamic_slice_in_dim(db, start, block, axis=0)
+        xn2 = jax.lax.dynamic_slice_in_dim(db_n2, start, block, axis=0)
+        d2 = xn2[None, :] - 2.0 * q @ x.T + qn2[:, None]
+        idx = start + jnp.arange(block, dtype=jnp.int32)
+        d2 = jnp.where(idx[None, :] < n, jnp.maximum(d2, 0.0), jnp.inf)
+        cat_d = jnp.concatenate([best_d, d2], axis=1)
+        cat_i = jnp.concatenate([best_i, jnp.broadcast_to(idx, d2.shape)], axis=1)
+        order = jnp.argsort(cat_d, axis=1)[:, :k]
+        return jnp.take_along_axis(cat_d, order, axis=1), jnp.take_along_axis(cat_i, order, axis=1)
+
+    best_d = jnp.full((q.shape[0], k), jnp.inf, dtype=jnp.float32)
+    best_i = jnp.full((q.shape[0], k), -1, dtype=jnp.int32)
+    best_d, best_i = jax.lax.fori_loop(0, nblk, body, (best_d, best_i))
+    return best_i, jnp.sqrt(best_d)
+
+
+def exact_knn(db, queries, k: int = 1, block: int = 16384):
+    """Returns (ids [Q, k], dists [Q, k]) exact nearest neighbors."""
+    db = jnp.asarray(db, dtype=jnp.float32)
+    q = jnp.asarray(queries, dtype=jnp.float32)
+    n = db.shape[0]
+    block = min(block, max(128, n))
+    pad = (-n) % block
+    if pad:
+        db_p = jnp.concatenate([db, jnp.zeros((pad, db.shape[1]), db.dtype)], axis=0)
+    else:
+        db_p = db
+    db_n2 = jnp.sum(db_p * db_p, axis=-1)
+    # mask the padding rows out via the n bound inside the kernel
+    return _exact_block(db_p, db_n2, q, k, block)
+
+
+def exact_knn_np(db: np.ndarray, queries: np.ndarray, k: int = 1):
+    """NumPy oracle (tests)."""
+    db = np.asarray(db, dtype=np.float64)
+    q = np.asarray(queries, dtype=np.float64)
+    d2 = ((q[:, None, :] - db[None, :, :]) ** 2).sum(-1)
+    idx = np.argsort(d2, axis=1)[:, :k]
+    return idx.astype(np.int32), np.sqrt(np.take_along_axis(d2, idx, axis=1)).astype(np.float32)

@@ -1,0 +1,31 @@
+"""Shared helpers for architecture configs: input_specs() builds the
+ShapeDtypeStruct stand-ins for every model input of a given shape cell
+(dry-run contract: weak-type-correct, shardable, no device allocation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ArchConfig, SHAPES, ShapeSpec
+
+__all__ = ["input_specs", "SHAPES"]
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """Model inputs for one shape cell, as ShapeDtypeStructs."""
+    spec = SHAPES[shape_name]
+    B, T = spec.global_batch, spec.seq_len
+    tok = jnp.int32
+    out = {}
+    if spec.kind == "train":
+        out["tokens"] = jax.ShapeDtypeStruct((B, T), tok)
+        out["targets"] = jax.ShapeDtypeStruct((B, T), tok)
+        out["mask"] = jax.ShapeDtypeStruct((B, T), jnp.float32)
+    elif spec.kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((B, T), tok)
+    else:  # decode: one new token against a seq_len-deep cache
+        out["tokens"] = jax.ShapeDtypeStruct((B, 1), tok)
+    if cfg.family == "encdec" and spec.kind != "decode":
+        out["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_frames, cfg.d_model),
+                                             cfg.activation_dtype)
+    return out

@@ -1,0 +1,23 @@
+"""E2LSH / E2LSH-on-Storage core (the paper's contribution, in JAX)."""
+from .probabilities import (
+    LSHParams,
+    collision_probability,
+    radii_schedule,
+    rho,
+    solve_params,
+)
+from .hashing import HashFamily, make_hash_family, hash_points_radius
+from .index import E2LSHIndex, IndexStats, build_index
+from .query import QueryConfig, QueryResult, query_batch, query_batch_adaptive
+from .e2lshos import E2LSHoS, measured_query
+from .tuning import overall_ratio, tune_gamma
+from . import io_count, storage
+
+__all__ = [
+    "LSHParams", "collision_probability", "radii_schedule", "rho", "solve_params",
+    "HashFamily", "make_hash_family", "hash_points_radius",
+    "E2LSHIndex", "IndexStats", "build_index",
+    "QueryConfig", "QueryResult", "query_batch", "query_batch_adaptive",
+    "E2LSHoS", "measured_query", "overall_ratio", "tune_gamma",
+    "io_count", "storage",
+]

@@ -1,0 +1,181 @@
+"""E2LSH-on-Storage facade: build / query / account, in one object.
+
+Modes
+-----
+* ``tier="storage"`` — E2LSHoS (paper Sec. 5): hash tables + bucket blocks on
+  the storage tier, coordinates in DRAM; queries count I/Os.
+* ``tier="memory"`` — in-memory E2LSH baseline: identical algorithm and
+  results; the accounting reports zero storage I/O and a DRAM footprint that
+  includes the whole index (Table 6 / Sec. 4.5 footprint analysis).
+
+The *executable* data structures are identical (this container has one memory
+tier); what differs is the accounting and the modeled query time, exactly as
+in the paper's Sec. 4 analysis framework.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .index import E2LSHIndex, build_index
+from .probabilities import LSHParams, solve_params
+from .query import QueryConfig, QueryResult, query_batch, query_batch_adaptive
+from . import storage as storage_mod
+
+__all__ = ["E2LSHoS", "MemoryFootprint", "measured_query"]
+
+
+@dataclasses.dataclass
+class MemoryFootprint:
+    """Table-6-style accounting, bytes."""
+
+    index_on_storage: int
+    dram_usage: int
+    dram_index_part: int
+    db_bytes: int
+
+
+@dataclasses.dataclass
+class MeasuredQuery:
+    result: QueryResult
+    t_compute_per_query: float   # measured wall time / Q (this machine)
+    nio_mean: float
+    cands_mean: float
+    radii_mean: float
+
+
+class E2LSHoS:
+    """High-level index: ``E2LSHoS.build(db, ...)`` then ``.query(qs, k=...)``."""
+
+    def __init__(self, index: E2LSHIndex, tier: str = "storage"):
+        assert tier in ("storage", "memory")
+        self.index = index
+        self.tier = tier
+        self._arrays = None
+
+    # -- construction ------------------------------------------------------
+    @staticmethod
+    def build(
+        db: np.ndarray,
+        *,
+        c: float = 2.0,
+        w: float = 4.0,
+        gamma: float = 1.0,
+        s_scale: float = 1.0,
+        tier: str = "storage",
+        params: Optional[LSHParams] = None,
+        seed: int = 0,
+        max_m: int = 64,
+        max_L: int = 256,
+        u_bits: Optional[int] = None,
+        block_bytes: int = 512,
+    ) -> "E2LSHoS":
+        db = np.asarray(db)
+        n, d = db.shape
+        if params is None:
+            x_max = float(np.abs(db).max())
+            params = solve_params(
+                n, d, c=c, w=w, gamma=gamma, x_max=x_max, seed=seed,
+                s_scale=s_scale, max_m=max_m, max_L=max_L, u_bits=u_bits,
+                block_bytes=block_bytes,
+            )
+        index = build_index(db, params, key=jax.random.PRNGKey(seed))
+        return E2LSHoS(index, tier=tier)
+
+    @property
+    def params(self) -> LSHParams:
+        return self.index.params
+
+    def arrays(self) -> dict:
+        if self._arrays is None:
+            arr = self.index.as_arrays()
+            arr["db_norm2"] = jnp.sum(arr["db"].astype(jnp.float32) ** 2, axis=-1)
+            self._arrays = arr
+        return self._arrays
+
+    # -- querying ----------------------------------------------------------
+    def query_config(self, *, k: int = 1, collect_probe_sizes: bool = False,
+                     s_cap: Optional[int] = None, max_chain: int = 0,
+                     block_objs: Optional[int] = None) -> QueryConfig:
+        cfg = QueryConfig.from_params(
+            self.params, k=k, max_chain=max_chain,
+            collect_probe_sizes=collect_probe_sizes,
+        )
+        if s_cap is not None:
+            cfg = dataclasses.replace(cfg, S=int(s_cap), sbuf=0)
+            cfg.__post_init__()
+        if block_objs is not None and block_objs != cfg.block_objs:
+            # narrower gather chunks (timing knob): identical candidates and
+            # results; storage-block I/O accounting is replayed separately at
+            # the paper's 512 B granularity (io_count)
+            cfg = dataclasses.replace(
+                cfg, block_objs=int(block_objs),
+                max_chain=max(1, -(-cfg.S // int(block_objs)) + 1))
+        return cfg
+
+    def query(self, queries, *, k: int = 1, adaptive: bool = True,
+              collect_probe_sizes: bool = False, s_cap: Optional[int] = None,
+              block_objs: Optional[int] = None) -> QueryResult:
+        cfg = self.query_config(k=k, collect_probe_sizes=collect_probe_sizes,
+                                s_cap=s_cap, block_objs=block_objs)
+        fn = query_batch_adaptive if adaptive else query_batch
+        return fn(self.arrays(), jnp.asarray(queries), cfg)
+
+    # -- accounting (Table 6) ----------------------------------------------
+    def footprint(self) -> MemoryFootprint:
+        st = self.index.stats
+        entry_bytes = st.entries * 5  # 5 B object infos (Sec. 5.1)
+        if self.tier == "storage":
+            dram_index = st.dram_index_bytes
+            dram = st.db_bytes + dram_index
+            on_storage = st.index_storage_bytes
+        else:
+            dram_index = st.index_storage_bytes
+            dram = st.db_bytes + dram_index
+            on_storage = 0
+        del entry_bytes
+        return MemoryFootprint(
+            index_on_storage=on_storage,
+            dram_usage=dram,
+            dram_index_part=dram_index,
+            db_bytes=st.db_bytes,
+        )
+
+    # -- modeled external-memory query time (Sec. 4) ------------------------
+    def modeled_time(self, t_compute: float, nio: float,
+                     cfg: storage_mod.StorageConfig, *, async_io: bool = True) -> float:
+        if self.tier == "memory":
+            return t_compute
+        fn = storage_mod.t_async if async_io else storage_mod.t_sync
+        return fn(t_compute, nio, cfg)
+
+
+def measured_query(idx: E2LSHoS, queries, *, k: int = 1, repeats: int = 3,
+                   collect_probe_sizes: bool = False,
+                   block_objs: Optional[int] = None) -> MeasuredQuery:
+    """Run the adaptive query and measure wall time per query on this host.
+
+    The first call includes compile; we time subsequent repeats.
+    """
+    queries = jnp.asarray(queries)
+    kw = dict(k=k, collect_probe_sizes=collect_probe_sizes,
+              block_objs=block_objs)
+    res = idx.query(queries, **kw)
+    jax.block_until_ready(res.ids)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        res = idx.query(queries, **kw)
+        jax.block_until_ready(res.ids)
+    dt = (time.perf_counter() - t0) / repeats / queries.shape[0]
+    return MeasuredQuery(
+        result=res,
+        t_compute_per_query=dt,
+        nio_mean=float(jnp.mean(res.nio.astype(jnp.float32))),
+        cands_mean=float(jnp.mean(res.cands_checked.astype(jnp.float32))),
+        radii_mean=float(jnp.mean(res.radii_searched.astype(jnp.float32))),
+    )

@@ -1,0 +1,5 @@
+from .synthetic import Dataset, DATASETS, make_dataset, nn_scale
+from .tokens import TokenPipeline, TokenPipelineState
+
+__all__ = ["Dataset", "DATASETS", "make_dataset", "nn_scale",
+           "TokenPipeline", "TokenPipelineState"]

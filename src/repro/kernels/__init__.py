@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper with padding/fallback), ref.py (pure-jnp oracle). Kernels are
+validated on CPU via interpret=True against their oracles (tests/ sweeps
+shapes and dtypes); on TPU the same pallas_call lowers natively.
+"""
+from .lsh_hash import lsh_hash, lsh_hash_ref
+from .l2_distance import l2_distance, l2_distance_ref
+from .bucket_probe import bucket_probe, bucket_probe_ref, blockify_entries
+
+__all__ = [
+    "lsh_hash", "lsh_hash_ref",
+    "l2_distance", "l2_distance_ref",
+    "bucket_probe", "bucket_probe_ref", "blockify_entries",
+]

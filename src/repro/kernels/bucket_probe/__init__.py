@@ -1,0 +1,4 @@
+from .ops import bucket_probe, blockify_entries, INVALID
+from .ref import bucket_probe_ref
+
+__all__ = ["bucket_probe", "blockify_entries", "bucket_probe_ref", "INVALID"]

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: scalar-prefetch bucket-block gather + fingerprint filter.
+
+TPU analogue of the paper's asynchronous 512 B block read (Fig. 10 Step 2):
+the list of block rows to fetch is a *scalar-prefetch* operand, so the DMA
+engine streams exactly the requested blocks HBM -> VMEM while the VPU
+fingerprint-filters the previous block — the hardware overlap that Eq. 7's
+max(CPU lane, storage lane) models, expressed with Pallas' grid pipeline.
+
+Layout contract (ops.py):
+  block_rows: [G]  int32  (scalar prefetch) row index per grid step
+  qfp:        [G_pad_rows, 1] -> per-step query fingerprint, gathered via
+              index_map (1 row per step)
+  ids_blocks: [NB, BLKp] int32  object ids, padded slots = INVALID
+  fps_blocks: [NB, BLKp] int32  fingerprints
+  out:        [G, BLKp] int32   ids where fingerprint matches, else INVALID
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+__all__ = ["bucket_probe_pallas", "INVALID"]
+
+INVALID = np.int32(2**31 - 1)
+
+
+def _kernel(block_rows_ref, qfp_ref, ids_ref, fps_ref, out_ref):
+    del block_rows_ref  # consumed by the index_map (DMA steering)
+    ids = ids_ref[...]            # [1, BLKp]
+    fps = fps_ref[...]            # [1, BLKp]
+    qfp = qfp_ref[...]            # [1, 1]
+    match = (fps == qfp) & (ids != INVALID)
+    out_ref[...] = jnp.where(match, ids, INVALID)
+
+
+def bucket_probe_pallas(block_rows, qfp, ids_blocks, fps_blocks, *,
+                        interpret: bool = False):
+    G = block_rows.shape[0]
+    NB, BLKp = ids_blocks.shape
+    grid = (G,)
+    grid_spec = pl.GridSpec(
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # handled via scalar prefetch
+        ],
+    )
+    del grid_spec
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1), lambda i, rows: (i, 0)),
+                pl.BlockSpec((1, BLKp), lambda i, rows: (rows[i], 0)),
+                pl.BlockSpec((1, BLKp), lambda i, rows: (rows[i], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, BLKp), lambda i, rows: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((G, BLKp), jnp.int32),
+        interpret=interpret,
+    )(block_rows, qfp, ids_blocks, fps_blocks)

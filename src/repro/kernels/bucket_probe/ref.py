@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the bucket_probe kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["bucket_probe_ref", "INVALID"]
+
+INVALID = np.int32(2**31 - 1)
+
+
+def bucket_probe_ref(block_rows, qfp, ids_blocks, fps_blocks):
+    """block_rows [G] int32, qfp [G] int32, ids/fps_blocks [NB, BLKp] int32
+    -> [G, BLKp] int32: matching ids, INVALID elsewhere."""
+    ids = jnp.take(ids_blocks, block_rows, axis=0)      # [G, BLKp]
+    fps = jnp.take(fps_blocks, block_rows, axis=0)
+    match = (fps == qfp[:, None]) & (ids != INVALID)
+    return jnp.where(match, ids, INVALID)

@@ -1,0 +1,4 @@
+from .ops import l2_distance
+from .ref import l2_distance_ref
+
+__all__ = ["l2_distance", "l2_distance_ref"]

@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: tiled squared-Euclidean distance (candidate checking).
+
+The paper accelerates distance checking with AVX-512; on TPU the dominant
+term -2*Q@Xt is an MXU matmul, with the norm corrections fused as a VPU
+epilogue inside the same VMEM residency:
+
+    d2[i, j] = ||q_i||^2 + ||x_j||^2 - 2 q_i . x_j   (clamped at 0)
+
+Layout contract (ops.py): Q [NQ, D], X [NC, D], D % 128 == 0, tiles
+(TQ, D) x (TC, D) -> (TQ, TC); norms are computed in-kernel (cheap relative
+to the matmul, saves two HBM-resident inputs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["l2_distance_pallas"]
+
+
+def _kernel(q_ref, x_ref, out_ref):
+    q = q_ref[...]                                   # [TQ, D]
+    x = x_ref[...]                                   # [TC, D]
+    dot = jnp.dot(q, x.T, preferred_element_type=jnp.float32)   # MXU [TQ, TC]
+    qn2 = jnp.sum(q * q, axis=-1, keepdims=True)     # [TQ, 1]
+    xn2 = jnp.sum(x * x, axis=-1, keepdims=True).T   # [1, TC]
+    out_ref[...] = jnp.maximum(qn2 + xn2 - 2.0 * dot, 0.0)
+
+
+def l2_distance_pallas(q, x, *, tile_q: int = 128, tile_c: int = 128,
+                       interpret: bool = False):
+    NQ, D = q.shape
+    NC, _ = x.shape
+    assert NQ % tile_q == 0 and NC % tile_c == 0, (NQ, NC, tile_q, tile_c)
+    grid = (NQ // tile_q, NC // tile_c)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_c, D), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, tile_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((NQ, NC), jnp.float32),
+        interpret=interpret,
+    )(q, x)

@@ -1,0 +1,38 @@
+"""jit'd public wrapper for l2_distance: padding + tile selection."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import l2_distance_pallas
+from .ref import l2_distance_ref
+
+__all__ = ["l2_distance"]
+
+
+def _pad_to(x, mult):
+    return -(-x // mult) * mult
+
+
+@partial(jax.jit, static_argnames=("tile_q", "tile_c", "interpret", "force_pallas"))
+def l2_distance(q, x, *, tile_q: int = 128, tile_c: int = 128,
+                interpret: bool = False, force_pallas: bool = False):
+    """Squared L2 distances [NQ, NC] between rows of q [NQ, D] and x [NC, D].
+
+    Padded rows return garbage distances in the padding region only; the
+    public result is sliced back to [NQ, NC]. Padding the feature dim with
+    zeros is exact.
+    """
+    NQ, D = q.shape
+    NC, _ = x.shape
+    if not force_pallas and (NQ < tile_q and NC < tile_c):
+        return l2_distance_ref(q, x)
+    Dp = _pad_to(max(D, 128), 128)
+    NQp = _pad_to(max(NQ, tile_q), tile_q)
+    NCp = _pad_to(max(NC, tile_c), tile_c)
+    qp = jnp.zeros((NQp, Dp), jnp.float32).at[:NQ, :D].set(q.astype(jnp.float32))
+    xp = jnp.zeros((NCp, Dp), jnp.float32).at[:NC, :D].set(x.astype(jnp.float32))
+    out = l2_distance_pallas(qp, xp, tile_q=tile_q, tile_c=tile_c, interpret=interpret)
+    return out[:NQ, :NC]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the l2_distance kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["l2_distance_ref"]
+
+
+def l2_distance_ref(q, x):
+    """q [NQ, D], x [NC, D] -> d2 [NQ, NC] (clamped at 0)."""
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    dot = jnp.dot(q, x.T, preferred_element_type=jnp.float32)
+    qn2 = jnp.sum(q * q, axis=-1, keepdims=True)
+    xn2 = jnp.sum(x * x, axis=-1, keepdims=True).T
+    return jnp.maximum(qn2 + xn2 - 2.0 * dot, 0.0)

@@ -1,0 +1,4 @@
+from .ops import lsh_hash
+from .ref import lsh_hash_ref
+
+__all__ = ["lsh_hash", "lsh_hash_ref"]

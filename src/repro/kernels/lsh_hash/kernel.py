@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: fused p-stable LSH hashing (projection -> floor ->
+multiply-mix combine -> bucket/fingerprint split).
+
+This is the TPU-native version of the paper's AVX-512 hash computation: the
+random projection X @ A is an MXU matmul; the quantize/combine epilogue runs
+on the VPU in the same VMEM residency (no HBM round-trip for the [N, L*m]
+intermediate, which is the whole point of fusing).
+
+Layout contract (enforced by ops.py):
+  x:    [N, D]        float32, D % 128 == 0 (zero-padded)
+  a:    [D, LMp]      float32, LMp = pad(L*m, 128)
+  bvec: [1, LMp]      float32, pre-multiplied shift b * (w*R)
+  rm:   [1, LMp]      int32, random odd multipliers (0 in padding columns)
+The (w*R) divisor is a compile-time constant so the quantization math is
+bit-identical to the ref oracle: floor((x@a + b*wr) / wr).
+  out bucket: [N, Lp] int32,  Lp = pad(L, 128)
+  out fp:     [N, Lp] int32
+
+Grid: (ceil(N / TN),); each step hashes a TN-row tile against the full
+projection block (VMEM-resident: D x LMp floats must fit, checked by ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lsh_hash_pallas"]
+
+
+def _fmix32(h):
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+def _kernel(x_ref, a_ref, b_ref, rm_ref, bucket_ref, fp_ref, *, L, m, u, fp_bits, w_r):
+    x = x_ref[...]                      # [TN, D]
+    a = a_ref[...]                      # [D, LMp]
+    b = b_ref[...]                      # [1, LMp] (pre-multiplied by w_r)
+    rm = rm_ref[...]                    # [1, LMp]
+    # MXU: projection; epilogue quantizes with the same op order as the oracle
+    proj = jnp.dot(x, a, preferred_element_type=jnp.float32)  # [TN, LMp]
+    hj = jnp.floor((proj + b) / jnp.float32(w_r)).astype(jnp.int32)
+    # combine m per-function hashes per table: padding columns have rm == 0
+    prod = hj.astype(jnp.uint32) * rm.astype(jnp.uint32)      # [TN, LMp]
+    lm = L * m
+    prod = prod[:, :lm].reshape(prod.shape[0], L, m)
+    acc = jnp.sum(prod, axis=-1, dtype=jnp.uint32)            # [TN, L]
+    hv = _fmix32(acc)
+    bucket = (hv & jnp.uint32((1 << u) - 1)).astype(jnp.int32)
+    fp = ((hv >> jnp.uint32(u)) & jnp.uint32((1 << fp_bits) - 1)).astype(jnp.int32)
+    Lp = bucket_ref.shape[-1]
+    if Lp > L:
+        pad = jnp.zeros((bucket.shape[0], Lp - L), dtype=jnp.int32)
+        bucket = jnp.concatenate([bucket, pad], axis=-1)
+        fp = jnp.concatenate([fp, pad], axis=-1)
+    bucket_ref[...] = bucket
+    fp_ref[...] = fp
+
+
+def lsh_hash_pallas(
+    x: jnp.ndarray,
+    a_scaled: jnp.ndarray,
+    bvec: jnp.ndarray,
+    rm: jnp.ndarray,
+    *,
+    L: int,
+    m: int,
+    u: int,
+    fp_bits: int,
+    w_r: float,
+    tile_n: int = 256,
+    interpret: bool = False,
+):
+    """Raw pallas_call wrapper; see ops.lsh_hash for the padded public API."""
+    N, D = x.shape
+    LMp = a_scaled.shape[1]
+    Lp = max(128, -(-L // 128) * 128)
+    assert N % tile_n == 0, (N, tile_n)
+    grid = (N // tile_n,)
+    kernel = functools.partial(_kernel, L=L, m=m, u=u, fp_bits=fp_bits, w_r=w_r)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, D), lambda i: (i, 0)),
+            pl.BlockSpec((D, LMp), lambda i: (0, 0)),
+            pl.BlockSpec((1, LMp), lambda i: (0, 0)),
+            pl.BlockSpec((1, LMp), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_n, Lp), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, Lp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, Lp), jnp.int32),
+            jax.ShapeDtypeStruct((N, Lp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, a_scaled, bvec, rm)

@@ -1,0 +1,52 @@
+"""jit'd public wrapper for the lsh_hash Pallas kernel: handles padding,
+layout, and VMEM budgeting; falls back to the jnp reference when the problem
+is too small to tile profitably."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import lsh_hash_pallas
+from .ref import lsh_hash_ref
+
+__all__ = ["lsh_hash"]
+
+_VMEM_BUDGET_BYTES = 8 * 2**20  # projection block a[D, LMp] must fit comfortably
+
+
+def _pad_to(x, mult):
+    return -(-x // mult) * mult
+
+
+@partial(jax.jit, static_argnames=("w_r", "u", "fp_bits", "tile_n", "interpret", "force_pallas"))
+def lsh_hash(x, a, b, rm, *, w_r: float, u: int, fp_bits: int,
+             tile_n: int = 256, interpret: bool = False, force_pallas: bool = False):
+    """Hash points under one (radius, family) block.
+
+    x [N, D] float; a [L, m, D]; b [L, m] in [0,1); rm [L, m] uint32/int32.
+    Returns (bucket [N, L] int32, fp [N, L] int32).
+    """
+    N, D = x.shape
+    L, m, _ = a.shape
+    Dp = _pad_to(max(D, 128), 128)
+    LM = L * m
+    LMp = _pad_to(max(LM, 128), 128)
+    a_block_bytes = Dp * LMp * 4
+    if not force_pallas and (a_block_bytes > _VMEM_BUDGET_BYTES):
+        return lsh_hash_ref(x, a, b, rm, w_r=w_r, u=u, fp_bits=fp_bits)
+
+    Np = _pad_to(max(N, tile_n), tile_n)
+    x_p = jnp.zeros((Np, Dp), jnp.float32).at[:N, :D].set(x.astype(jnp.float32))
+    a2 = a.reshape(L * m, -1).T.astype(jnp.float32)  # [D, LM]
+    a_p = jnp.zeros((Dp, LMp), jnp.float32).at[:D, :LM].set(a2)
+    # pre-multiply the shift (oracle computes floor((x.a + b*wr)/wr))
+    b_p = jnp.zeros((1, LMp), jnp.float32).at[0, :LM].set(
+        (b.reshape(-1) * jnp.float32(w_r)).astype(jnp.float32))
+    rm_p = jnp.zeros((1, LMp), jnp.int32).at[0, :LM].set(rm.reshape(-1).astype(jnp.int32))
+    bucket, fp = lsh_hash_pallas(
+        x_p, a_p, b_p, rm_p, L=L, m=m, u=u, fp_bits=fp_bits, w_r=w_r,
+        tile_n=tile_n, interpret=interpret,
+    )
+    return bucket[:N, :L], fp[:N, :L]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the lsh_hash kernel (mirrors core.hashing exactly)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.hashing import fmix32
+
+__all__ = ["lsh_hash_ref"]
+
+
+def lsh_hash_ref(x, a, b, rm, *, w_r: float, u: int, fp_bits: int):
+    """x [N, D], a [L, m, D], b [L, m], rm [L, m] -> (bucket, fp) [N, L].
+
+    Identical math to core.hashing._hash_points_impl (the production path).
+    """
+    proj = jnp.einsum("nd,lmd->nlm", x.astype(jnp.float32), a.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+    hj = jnp.floor((proj + b[None] * w_r) / w_r).astype(jnp.int32)
+    acc = jnp.sum(hj.astype(jnp.uint32) * rm[None].astype(jnp.uint32), axis=-1,
+                  dtype=jnp.uint32)
+    hv = fmix32(acc)
+    bucket = (hv & jnp.uint32((1 << u) - 1)).astype(jnp.int32)
+    fp = ((hv >> jnp.uint32(u)) & jnp.uint32((1 << fp_bits) - 1)).astype(jnp.int32)
+    return bucket, fp

@@ -1,0 +1,3 @@
+from .mesh import make_production_mesh, make_test_mesh, available_mesh
+
+__all__ = ["make_production_mesh", "make_test_mesh", "available_mesh"]

@@ -1,0 +1,409 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production mesh with 512 placeholder host devices.
+
+MUST be run as its own process (the XLA_FLAGS line above executes before any
+jax import, and jax locks the device count on first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --out dryrun_results.jsonl
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b \
+        --shape train_4k --mesh single
+
+Per cell it records: compile success, memory_analysis (bytes per device),
+cost_analysis (FLOPs / bytes accessed), and the collective traffic parsed
+from the post-SPMD compiled HLO — the inputs to the roofline analysis
+(EXPERIMENTS.md section Roofline).
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from .mesh import make_production_mesh
+from .steps import build_cell
+from ..configs import ARCH_IDS, get_config
+from ..models.config import SHAPES
+from ..models.sharding import AxisRules
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum *operand* sizes of every collective op in the (per-device,
+    post-SPMD) compiled HLO. Returns bytes per collective kind."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        kindhit = None
+        rhs = s.split("=", 1)[1]
+        for kind in _COLLECTIVES:
+            if f" {kind}(" in rhs or rhs.lstrip().startswith(f"{kind}("):
+                # exclude -start/-done duplicates except treat -start as the op
+                if f"{kind}-done" in rhs:
+                    kindhit = None
+                    break
+                kindhit = kind
+                break
+        if not kindhit:
+            continue
+        # operands are inside the op's parens; result type precedes the op name
+        try:
+            inner = rhs.split("(", 1)[1]
+        except IndexError:
+            continue
+        shapes = _SHAPE_RE.findall(inner)
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        if nbytes == 0:
+            # fall back to the result shape (operand may be a bare name)
+            shapes = _SHAPE_RE.findall(rhs.split(" ", 2)[0] if rhs else "")
+            res = _SHAPE_RE.findall(s.split("=", 1)[0])
+            nbytes = sum(_shape_bytes(dt, dims) for dt, dims in res)
+        out[kindhit] += nbytes
+        counts[kindhit] += 1
+    out_counts = {f"n_{k}": v for k, v in counts.items()}
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out.update(out_counts)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             hlo_dir: str | None = None) -> dict:
+    t0 = time.time()
+    cfg = get_config(arch)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "params": cfg.param_count(), "active_params": cfg.active_param_count()}
+    ok, reason = cfg.supports_shape(shape_name)
+    if not ok:
+        rec.update(status="SKIP", reason=reason)
+        return rec
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        rules = AxisRules.make(mesh)
+        cell = build_cell(cfg, shape_name, mesh, rules=rules)
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate)
+        with mesh:
+            lowered = jitted.lower(*cell.in_sds)
+            compiled = lowered.compile()
+            try:
+                mem = compiled.memory_analysis()
+                rec["memory"] = {
+                    "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                    "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                    "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                    "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+                }
+            except Exception as e:  # backend may not support it
+                rec["memory"] = {"error": str(e)[:200]}
+            try:
+                cost = compiled.cost_analysis()
+                if isinstance(cost, (list, tuple)):
+                    cost = cost[0]
+                rec["cost"] = {k: float(v) for k, v in cost.items()
+                               if isinstance(v, (int, float)) and (
+                                   "flops" in k or "bytes" in k or "utilization" in k.lower())}
+            except Exception as e:
+                rec["cost"] = {"error": str(e)[:200]}
+            text = compiled.as_text()
+            rec["collectives"] = parse_collectives(text)
+            if hlo_dir:
+                import pathlib
+                p = pathlib.Path(hlo_dir)
+                p.mkdir(parents=True, exist_ok=True)
+                (p / f"{arch}_{shape_name}_{rec['mesh']}.hlo.txt").write_text(text)
+        rec["status"] = "OK"
+    except Exception as e:
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {str(e)[:500]}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["seconds"] = round(time.time() - t0, 1)
+    return rec
+
+
+def run_ann_cell(multi_pod: bool, *, n: int = 1_000_000_000, d: int = 128,
+                 n_queries: int = 1024, k: int = 10,
+                 db_dtype: str = "float32", s_cap_per_shard: int | None = None,
+                 fp_dtype: str = "uint16", tag: str | None = None) -> dict:
+    """The paper's own workload at production scale: BIGANN(1B) E2LSHoS index
+    sharded over every device; lower + compile the sharded query step.
+
+    `db_dtype` / `s_cap_per_shard` are perf levers (BIGANN is byte data, so
+    uint8 coordinates are lossless and cut gather traffic 4x vs f32)."""
+    import dataclasses as dc
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from ..core.probabilities import solve_params
+    from ..core.query import QueryConfig
+    from ..core import distributed as dist
+
+    t0 = time.time()
+    rec = {"arch": "e2lshos-bigann1b", "shape": f"ann_q{n_queries}_k{k}",
+           "mesh": "2x16x16" if multi_pod else "16x16", "params": 0,
+           "db_dtype": db_dtype}
+    if tag:
+        rec["tag"] = tag
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        devs = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+        n_shard = -(-n // devs)
+        u_bits = max(8, int(np.floor(np.log2(n_shard))) - 1)
+        fp_store_bits = 8 * jnp.dtype(fp_dtype).itemsize
+        params = solve_params(n, d, c=2.0, w=4.0, gamma=1.0, x_max=1.0,
+                              max_L=48, max_m=24, u_bits=u_bits,
+                              v_bits=min(32, u_bits + min(fp_store_bits, 16)))
+        r, L, u = params.r, params.L, params.u
+        E_shard = n_shard * L * r
+        sds = jax.ShapeDtypeStruct
+        arrays = dict(
+            a=sds((r, L, params.m, d), jnp.float32),
+            b=sds((r, L, params.m), jnp.float32),
+            rm=sds((r, L, params.m), jnp.uint32),
+            table_off=sds((devs, r, L, 1 << u), jnp.int32),
+            table_cnt=sds((devs, r, L, 1 << u), jnp.int32),
+            entries_id=sds((devs, E_shard), jnp.int32),
+            entries_fp=sds((devs, E_shard), jnp.dtype(fp_dtype)),
+            db=sds((devs, n_shard, d), jnp.dtype(db_dtype)),
+        )
+        arrays["db_norm2"] = sds((devs, n_shard), jnp.float32)
+        index_axes = mesh.axis_names
+        shard_offsets = sds((devs,), jnp.int32)
+        queries = sds((n_queries, d), jnp.float32)
+        db_itemsize = jnp.dtype(db_dtype).itemsize
+        rec["index_params"] = dict(m=params.m, L=L, r=r, u=u,
+                                   entries_per_device=E_shard,
+                                   index_bytes_per_device=int(
+                                       E_shard * 6 + r * L * (1 << u) * 8
+                                       + n_shard * d * db_itemsize))
+        s_cap = s_cap_per_shard or 4 * k
+        rec["s_cap_per_shard"] = s_cap
+        # analytic per-chip traffic (real HBM gathers; XLA's per-op "bytes
+        # accessed" charges full operand arrays for gathers, so it cannot be
+        # used for this cell — see EXPERIMENTS.md)
+        sbuf = max(128, -(-s_cap // 128) * 128)
+        blk = params.block_objs
+        entry_bytes = 4 + jnp.dtype(fp_dtype).itemsize  # paper: 5 B object info
+        per_query = (
+            r * L * (4 + 4 + 4)                 # table off/cnt gathers + bitmap
+            + r * L * 2 * blk * entry_bytes     # entry chunks, ~2 per bucket
+            + r * sbuf * (d * db_itemsize + 4)  # candidate coords + norms
+        )
+        rec["analytic_bytes_per_chip"] = int(n_queries * per_query)
+
+        sharded = dist.ShardedIndexArrays(
+            arrays=arrays, shard_offsets=shard_offsets, params=params,
+            num_shards=devs)
+
+        def fn(arr, offs, qs):
+            tmp = dc.replace(sharded, arrays=arr, shard_offsets=offs)
+            return dist.sharded_query(tmp, qs, mesh, k=k,
+                                      index_axes=index_axes,
+                                      s_cap_per_shard=s_cap)
+
+        in_sh = (
+            {kk: NamedSharding(mesh, P(index_axes, *([None] * (len(v.shape) - 1))))
+             if kk not in ("a", "b", "rm")
+             else NamedSharding(mesh, P(*([None] * len(v.shape))))
+             for kk, v in arrays.items()},
+            NamedSharding(mesh, P(index_axes)),
+            NamedSharding(mesh, P()),
+        )
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(
+                arrays, shard_offsets, queries)
+            compiled = lowered.compile()
+            try:
+                mem = compiled.memory_analysis()
+                rec["memory"] = {
+                    "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                    "temp_bytes": getattr(mem, "temp_size_in_bytes", None)}
+            except Exception as e:
+                rec["memory"] = {"error": str(e)[:200]}
+            try:
+                cost = compiled.cost_analysis()
+                if isinstance(cost, (list, tuple)):
+                    cost = cost[0]
+                rec["cost"] = {kk: float(v) for kk, v in cost.items()
+                               if isinstance(v, (int, float)) and (
+                                   "flops" in kk or "bytes" in kk)}
+            except Exception as e:
+                rec["cost"] = {"error": str(e)[:200]}
+            rec["collectives"] = parse_collectives(compiled.as_text())
+        rec["status"] = "OK"
+    except Exception as e:
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {str(e)[:500]}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["seconds"] = round(time.time() - t0, 1)
+    return rec
+
+
+def _depth_variant(cfg, k: int):
+    """Return (config with k stack units, units_in_full_model). A unit is one
+    layer (dense/moe/ssm), one mamba-group+shared-block (hybrid), or one
+    enc+dec layer pair (encdec). scan is disabled so cost_analysis counts
+    every unit (XLA counts a while-loop body once regardless of trip count —
+    the depth extrapolation corrects for that)."""
+    import dataclasses as dc
+    if cfg.family == "hybrid":
+        gs = cfg.shared_attn_every
+        return (dc.replace(cfg, n_layers=k * gs, scan_layers=False),
+                cfg.n_layers // gs)
+    if cfg.family == "encdec":
+        return (dc.replace(cfg, n_layers=k, enc_layers=k, scan_layers=False),
+                cfg.n_layers)
+    return dc.replace(cfg, n_layers=k, scan_layers=False), cfg.n_layers
+
+
+def run_cell_extrapolated(arch: str, shape_name: str, multi_pod: bool,
+                          *, cfg_overrides: dict | None = None,
+                          explicit_out_shardings: bool = False,
+                          tag: str | None = None) -> dict:
+    """Depth-extrapolated cost: lower k=1 and k=2 unrolled variants, fit
+    flops/bytes/collectives = const + units * slope, evaluate at full depth.
+    Exact for homogeneous stacks (all assigned archs repeat one block).
+
+    `cfg_overrides`/`explicit_out_shardings` are the perf-hillclimb levers."""
+    import dataclasses as dc
+    from ..models.sharding import set_active_rules
+    t0 = time.time()
+    cfg_full = get_config(arch)
+    if cfg_overrides:
+        cfg_full = dc.replace(cfg_full, **cfg_overrides)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "params": cfg_full.param_count(),
+           "active_params": cfg_full.active_param_count(),
+           "extrapolated": True}
+    if tag:
+        rec["tag"] = tag
+    if cfg_overrides:
+        rec["overrides"] = {k: str(v) for k, v in cfg_overrides.items()}
+    ok, reason = cfg_full.supports_shape(shape_name)
+    if not ok:
+        rec.update(status="SKIP", reason=reason)
+        return rec
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        rules = AxisRules.make(mesh)
+        set_active_rules(rules)
+        points = {}
+        for k in (1, 2):
+            cfg_k, units_full = _depth_variant(cfg_full, k)
+            cell = build_cell(cfg_k, shape_name, mesh, rules=rules,
+                              explicit_out_shardings=explicit_out_shardings)
+            jit_kw = {}
+            if cell.out_shardings is not None:
+                jit_kw["out_shardings"] = cell.out_shardings
+            jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                             donate_argnums=cell.donate, **jit_kw)
+            with mesh:
+                compiled = jitted.lower(*cell.in_sds).compile()
+                cost = compiled.cost_analysis()
+                if isinstance(cost, (list, tuple)):
+                    cost = cost[0]
+                coll = parse_collectives(compiled.as_text())
+                points[k] = dict(
+                    flops=float(cost.get("flops", 0.0)),
+                    bytes=float(cost.get("bytes accessed", 0.0)),
+                    coll=float(coll.get("total", 0)),
+                )
+        n_units = units_full
+        def extrap(key):
+            f1, f2 = points[1][key], points[2][key]
+            return f1 + (n_units - 1) * (f2 - f1)
+        rec["cost"] = {"flops": extrap("flops"), "bytes accessed": extrap("bytes")}
+        rec["collectives"] = {"total": extrap("coll"),
+                              "per_unit": points[2]["coll"] - points[1]["coll"],
+                              "const": 2 * points[1]["coll"] - points[2]["coll"]}
+        rec["depth_points"] = points
+        rec["units"] = n_units
+        rec["status"] = "OK"
+    except Exception as e:
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {str(e)[:500]}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    finally:
+        from ..models.sharding import set_active_rules as _sar
+        _sar(None)
+    rec["seconds"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="both", choices=("single", "multi", "both"))
+    ap.add_argument("--ann", action="store_true", help="run the BIGANN(1B) ANN cell")
+    ap.add_argument("--extrapolate", action="store_true",
+                    help="depth-extrapolated cost records (roofline input)")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    ap.add_argument("--hlo-dir", default=None)
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    def emit(rec):
+        line = json.dumps(rec)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(line + "\n")
+        brief = {k: rec.get(k) for k in
+                 ("arch", "shape", "mesh", "status", "seconds", "reason", "error")}
+        print(json.dumps(brief), flush=True)
+        if rec.get("memory"):
+            print(f"  memory_analysis: {rec['memory']}", flush=True)
+        if rec.get("cost"):
+            cost_brief = {k: v for k, v in rec["cost"].items()
+                          if k in ("flops", "bytes accessed")}
+            print(f"  cost_analysis: {cost_brief}", flush=True)
+
+    if args.ann:
+        for mp in meshes:
+            emit(run_ann_cell(mp))
+        return
+
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                if args.extrapolate:
+                    emit(run_cell_extrapolated(arch, shape, mp))
+                else:
+                    emit(run_cell(arch, shape, mp, hlo_dir=args.hlo_dir))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Perf hillclimb driver: re-lower the three selected cells with one lever
+flipped at a time, recording hypothesis -> change -> before -> after.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --out hillclimb.jsonl
+
+Cells (chosen per EXPERIMENTS.md section Roofline):
+  A. command-r-plus-104b train_4k  — largest model, largest collective term
+  B. mixtral-8x22b prefill_32k     — the collective-dominated cell
+  C. e2lshos-bigann1b ann          — the paper's own workload (memory-bound)
+"""
+from . import dryrun  # noqa: F401  (sets XLA_FLAGS before jax loads)
+
+import argparse
+import json
+
+from .dryrun import run_ann_cell, run_cell_extrapolated
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="hillclimb.jsonl")
+    ap.add_argument("--cell", default="all", choices=("A", "B", "C", "all"))
+    args = ap.parse_args()
+
+    def emit(rec):
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        brief = {k: rec.get(k) for k in ("arch", "shape", "tag", "status", "seconds")}
+        if rec.get("status") == "OK":
+            brief["flops"] = rec.get("cost", {}).get("flops")
+            brief["bytes"] = rec.get("cost", {}).get("bytes accessed")
+            brief["coll"] = rec.get("collectives", {}).get("total")
+            brief["analytic_bytes"] = rec.get("analytic_bytes_per_chip")
+        else:
+            brief["error"] = rec.get("error")
+        print(json.dumps(brief), flush=True)
+
+    if args.cell in ("A", "all"):
+        # A: command-r-plus-104b train_4k
+        emit(run_cell_extrapolated("command-r-plus-104b", "train_4k", False,
+                                   tag="A0_baseline"))
+        emit(run_cell_extrapolated("command-r-plus-104b", "train_4k", False,
+                                   cfg_overrides=dict(bf16_compute_weights=True),
+                                   tag="A1_bf16_gathers"))
+        emit(run_cell_extrapolated("command-r-plus-104b", "train_4k", False,
+                                   explicit_out_shardings=True,
+                                   tag="A2_out_shardings"))
+        emit(run_cell_extrapolated("command-r-plus-104b", "train_4k", False,
+                                   cfg_overrides=dict(bf16_compute_weights=True,
+                                                      remat="dots"),
+                                   explicit_out_shardings=True,
+                                   tag="A3_bf16+dots+outsh"))
+
+    if args.cell in ("B", "all"):
+        emit(run_cell_extrapolated("mixtral-8x22b", "prefill_32k", False,
+                                   tag="B0_baseline"))
+        emit(run_cell_extrapolated("mixtral-8x22b", "prefill_32k", False,
+                                   cfg_overrides=dict(moe_shard_capacity=True),
+                                   tag="B1_shard_capacity"))
+        emit(run_cell_extrapolated("mixtral-8x22b", "prefill_32k", False,
+                                   cfg_overrides=dict(moe_shard_capacity=True,
+                                                      bf16_compute_weights=True),
+                                   tag="B2_cap+bf16"))
+
+    if args.cell in ("C", "all"):
+        emit(run_ann_cell(False, tag="C0_baseline"))
+        emit(run_ann_cell(False, db_dtype="uint8", tag="C1_uint8_db"))
+        emit(run_ann_cell(False, db_dtype="uint8", s_cap_per_shard=16,
+                          tag="C2_uint8+scap16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first init."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_test_mesh", "available_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds the 2-pod DCN axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 4):
+    """Small host-device mesh for multi-device tests (XLA_FLAGS-driven)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def available_mesh():
+    """Best-effort mesh over whatever devices exist (1 device -> 1x1)."""
+    n = len(jax.devices())
+    model = 1
+    for m in (8, 4, 2, 1):
+        if n % m == 0:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))

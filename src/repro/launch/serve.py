@@ -1,0 +1,123 @@
+"""Serving launcher: batched ANN serving (the paper's workload) and LM
+serving with optional kNN retrieval over an E2LSHoS index.
+
+    # the paper's workload: build an index over a synthetic dataset and serve
+    PYTHONPATH=src python -m repro.launch.serve --mode ann --dataset sift \
+        --n 20000 --queries 256 --k 10
+
+    # LM decode with retrieval over the model's own hidden states
+    PYTHONPATH=src python -m repro.launch.serve --mode lm --arch mamba2-1.3b \
+        --reduced --steps 8 --retrieval
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .mesh import available_mesh
+from ..configs import get_config
+from ..core import E2LSHoS, measured_query, overall_ratio
+from ..core.distributed import build_sharded_index, sharded_query
+from ..data import make_dataset
+from ..models import Model
+from ..serving import ServeEngine
+
+
+def serve_ann(args):
+    ds = make_dataset(args.dataset, n=args.n, n_queries=args.queries, seed=args.seed)
+    n_dev = len(jax.devices())
+    if n_dev > 1:
+        from jax.sharding import Mesh
+        mesh = Mesh(np.array(jax.devices()), ("shard",))
+        sh = build_sharded_index(ds.db, n_dev, gamma=args.gamma, max_L=args.max_L,
+                                 seed=args.seed)
+        t0 = time.perf_counter()
+        ids, dists, nio, found = sharded_query(
+            sh, jnp.asarray(ds.queries), mesh, k=args.k)
+        jax.block_until_ready(ids)
+        dt = time.perf_counter() - t0
+        ratio = overall_ratio(np.asarray(dists), ds.gt_dists[:, :args.k])
+        print(f"[sharded x{n_dev}] ratio={ratio:.4f} "
+              f"nio/query={float(np.mean(np.asarray(nio))):.0f} "
+              f"t/query={dt/args.queries*1e6:.0f}us")
+        return
+    idx = E2LSHoS.build(ds.db, gamma=args.gamma, max_L=args.max_L, seed=args.seed)
+    mq = measured_query(idx, ds.queries, k=args.k)
+    ratio = overall_ratio(np.asarray(mq.result.dists), ds.gt_dists[:, :args.k])
+    print(f"[single] ratio={ratio:.4f} nio/query={mq.nio_mean:.0f} "
+          f"cands={mq.cands_mean:.0f} radii={mq.radii_mean:.2f} "
+          f"t/query={mq.t_compute_per_query*1e6:.0f}us")
+    fp = idx.footprint()
+    print(f"index on storage: {fp.index_on_storage/1e6:.1f} MB; "
+          f"DRAM: {fp.dram_usage/1e6:.1f} MB (index part {fp.dram_index_part/1e6:.2f} MB)")
+
+
+def serve_lm(args):
+    cfg = get_config(args.arch, reduced=args.reduced)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    B, T = args.batch, args.seq
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, T)), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.enc_frames, cfg.d_model)), jnp.float32)
+
+    retrieval_fn = None
+    if args.retrieval:
+        # kNN-LM-style: datastore of random "context" embeddings in the
+        # model's output space; decode probes it every step
+        dstore = rng.normal(size=(args.dstore, cfg.vocab)).astype(np.float32)
+        dstore /= np.linalg.norm(dstore, axis=1, keepdims=True)
+        idx = E2LSHoS.build(dstore, gamma=0.8, max_L=16, seed=args.seed)
+
+        def retrieval_fn(hidden):
+            h = np.array(hidden, np.float32)
+            h /= np.maximum(np.linalg.norm(h, axis=1, keepdims=True), 1e-9)
+            res = idx.query(jnp.asarray(h), k=args.k)
+            return res.ids, res.dists
+
+    eng = ServeEngine(model, params, max_seq=T + args.steps + 1,
+                      cache_dtype=jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16,
+                      retrieval_fn=retrieval_fn)
+    t0 = time.perf_counter()
+    out = eng.generate(batch, steps=args.steps)
+    jax.block_until_ready(out.tokens)
+    dt = time.perf_counter() - t0
+    print(f"generated {out.tokens.shape} in {dt:.2f}s "
+          f"({dt/args.steps*1e3:.0f} ms/step at batch {B})")
+    if out.neighbors is not None:
+        print(f"retrieved neighbors per step: {out.neighbors.shape}")
+    print("sample:", np.asarray(out.tokens[0, :16]))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("ann", "lm"), default="ann")
+    ap.add_argument("--dataset", default="sift")
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--k", type=int, default=1)
+    ap.add_argument("--gamma", type=float, default=0.8)
+    ap.add_argument("--max-L", dest="max_L", type=int, default=32)
+    ap.add_argument("--arch", default="mamba2-1.3b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--retrieval", action="store_true")
+    ap.add_argument("--dstore", type=int, default=5000)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.mode == "ann":
+        serve_ann(args)
+    else:
+        serve_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Step builders + sharding resolution shared by dryrun/train/serve.
+
+`named_shardings_for` resolves a logical-axis tree against a mesh and
+*demotes* any axis that does not divide the dimension (e.g. batch=1 cannot
+shard over dp=16; KV=8 heads cannot shard over model=16). Demotions are
+deterministic and logged — they are the mesh-portability escape hatch, not a
+silent correctness hazard."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ArchConfig, SHAPES, ShapeSpec
+from ..models.model import Model
+from ..models.sharding import AxisRules
+from ..training.optimizer import AdamWConfig
+from ..training.train_step import TrainState, init_train_state, make_train_step
+
+__all__ = ["named_shardings_for", "build_cell", "batch_logical", "CellSpec"]
+
+
+def _is_spec_leaf(x):
+    return isinstance(x, tuple)
+
+
+def _axis_size(mesh: Mesh, phys) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, tuple):
+        s = 1
+        for a in phys:
+            s *= mesh.shape[a]
+        return s
+    return mesh.shape[phys]
+
+
+def named_shardings_for(sds_tree, logical_tree, mesh: Mesh, rules: AxisRules,
+                        demotions: Optional[list] = None):
+    """Map (ShapeDtypeStruct tree, logical-axis tree) -> NamedSharding tree."""
+
+    def one(sds, logical):
+        axes = []
+        for dim, ax in zip(sds.shape, logical + (None,) * (len(sds.shape) - len(logical))):
+            phys = rules.resolve(ax) if ax else None
+            if phys is not None and dim % _axis_size(mesh, phys) != 0:
+                if demotions is not None:
+                    demotions.append((sds.shape, ax, phys, dim))
+                phys = None
+            axes.append(phys)
+        return NamedSharding(mesh, P(*axes))
+
+    # sds_tree's leaves (ShapeDtypeStructs) drive traversal; the logical tree
+    # is flattened up-to those positions, so its tuple leaves arrive whole.
+    return jax.tree.map(one, sds_tree, logical_tree)
+
+
+def batch_logical(batch_sds: dict) -> dict:
+    """Logical axes for model input batches: batch dim -> dp, rest replicated."""
+    return {k: ("dp",) + (None,) * (len(v.shape) - 1) for k, v in batch_sds.items()}
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+
+    fn: Any                 # callable to jit
+    in_sds: tuple           # ShapeDtypeStruct pytrees (positional)
+    in_shardings: tuple
+    donate: tuple = ()
+    name: str = ""
+    out_shardings: Any = None
+
+
+def build_cell(cfg: ArchConfig, shape_name: str, mesh: Mesh,
+               *, rules: Optional[AxisRules] = None,
+               opt_cfg: Optional[AdamWConfig] = None,
+               microbatch: int = 0,
+               explicit_out_shardings: bool = False) -> CellSpec:
+    """Construct the jit-able step + ShapeDtypeStruct inputs + shardings for
+    one cell. No device allocation happens here (eval_shape only)."""
+    rules = rules or AxisRules.make(mesh)
+    spec = SHAPES[shape_name]
+    model = Model(cfg)
+    tp_size = rules.mesh_size("tp", mesh)
+    demo: list = []
+
+    from ..configs.common import input_specs as make_input_specs
+    batch_sds = make_input_specs(cfg, shape_name)
+    batch_sh = named_shardings_for(batch_sds, batch_logical(batch_sds), mesh,
+                                   rules, demo)
+
+    key = jax.random.PRNGKey(0)
+    if spec.kind == "train":
+        from ..training.optimizer import OptState
+        opt_cfg = opt_cfg or AdamWConfig()
+        state_sds = jax.eval_shape(lambda k: init_train_state(model, k), key)
+        pspec = model.param_specs(tp_size)
+        state_logical = TrainState(
+            params=pspec,
+            opt=OptState(mu=pspec, nu=pspec, step=()),
+            step=())
+        state_sh = named_shardings_for(state_sds, state_logical, mesh, rules, demo)
+        step = make_train_step(model, opt_cfg, microbatch=microbatch)
+        out_sh = (state_sh, None) if explicit_out_shardings else None
+        return CellSpec(fn=step, in_sds=(state_sds, batch_sds),
+                        in_shardings=(state_sh, batch_sh), donate=(0,),
+                        out_shardings=out_sh,
+                        name=f"{cfg.name}:{shape_name}:train")
+
+    params_sds = jax.eval_shape(model.init, key)
+    # serving runs on bf16 weights (fp32 masters are a training artifact);
+    # model code casts to the activation dtype at use sites either way
+    params_sds = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, cfg.activation_dtype)
+        if s.dtype == jnp.float32 else s, params_sds)
+    pspec = model.param_specs(tp_size)
+    params_sh = named_shardings_for(params_sds, pspec, mesh, rules, demo)
+    cache_dtype = cfg.activation_dtype
+    B, T = spec.global_batch, spec.seq_len
+    cache_sds = jax.eval_shape(lambda: model.init_cache(B, T, cache_dtype))
+    cspec = model.cache_specs(tp_size, T)
+    cache_sh = named_shardings_for(cache_sds, cspec, mesh, rules, demo)
+
+    if spec.kind == "prefill":
+        def fn(params, batch, cache):
+            return model.prefill(params, batch, cache)
+        return CellSpec(fn=fn, in_sds=(params_sds, batch_sds, cache_sds),
+                        in_shardings=(params_sh, batch_sh, cache_sh),
+                        donate=(2,), name=f"{cfg.name}:{shape_name}:prefill")
+
+    # decode: one token against a seq_len-deep cache
+    def fn(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+
+    tok_sds = batch_sds["tokens"]
+    tok_sh = named_shardings_for({"t": tok_sds}, {"t": ("dp", None)}, mesh,
+                                 rules, demo)["t"]
+    return CellSpec(fn=fn, in_sds=(params_sds, tok_sds, cache_sds),
+                    in_shardings=(params_sh, tok_sh, cache_sh), donate=(2,),
+                    name=f"{cfg.name}:{shape_name}:decode")

@@ -1,0 +1,6 @@
+from .config import ArchConfig, SHAPES, ShapeSpec
+from .model import Model
+from .sharding import AxisRules, logical_spec, named_sharding
+
+__all__ = ["ArchConfig", "SHAPES", "ShapeSpec", "Model", "AxisRules",
+           "logical_spec", "named_sharding"]

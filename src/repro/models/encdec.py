@@ -1,0 +1,211 @@
+"""Whisper-style encoder-decoder backbone (frontend stubbed).
+
+Per the assignment, the conv/mel frontend is a STUB: `input_specs()` provides
+precomputed frame embeddings [B, T_frames, d]. The encoder is a bidirectional
+transformer over frames with sinusoidal positions; the decoder is causal
+self-attention + cross-attention to the encoded frames, also with sinusoidal
+positions (no RoPE, matching Whisper). Cross K/V are computed once per layer
+at prefill and carried in the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ArchConfig
+from .sharding import shard_hint
+
+__all__ = ["init_encdec_params", "encdec_param_specs", "encode", "decode_forward",
+           "init_encdec_cache", "encdec_cache_specs", "EncDecCache"]
+
+
+@dataclasses.dataclass
+class EncDecCache:
+    self_attn: L.AttnCache      # [n_layers, ...] leaves
+    cross_k: jnp.ndarray        # [n_layers, B, T_enc, KV, hd]
+    cross_v: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(
+    EncDecCache, data_fields=["self_attn", "cross_k", "cross_v"], meta_fields=[])
+
+
+def _init_enc_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"norm1": L.init_norm(cfg), "attn": L.init_attention(k1, cfg),
+            "norm2": L.init_norm(cfg), "mlp": L.init_mlp(k2, cfg)}
+
+
+def _init_dec_layer(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"norm1": L.init_norm(cfg), "self_attn": L.init_attention(k1, cfg),
+            "norm_x": L.init_norm(cfg), "cross_attn": L.init_attention(k2, cfg),
+            "norm2": L.init_norm(cfg), "mlp": L.init_mlp(k3, cfg)}
+
+
+def init_encdec_params(key, cfg: ArchConfig):
+    ke, kenc, kdec, kn = jax.random.split(key, 4)
+    enc_keys = jax.random.split(kenc, cfg.enc_layers)
+    dec_keys = jax.random.split(kdec, cfg.n_layers)
+    return {
+        "embed": L.init_embedding(ke, cfg),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": L.init_norm(cfg),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def encdec_param_specs(cfg: ArchConfig, tp_size: int = 0):
+    from .layers import norm_specs
+    enc_leaf = {"norm1": norm_specs(cfg), "attn": L.attention_specs(cfg, tp_size),
+                "norm2": norm_specs(cfg), "mlp": L.mlp_specs(cfg)}
+    dec_leaf = {"norm1": norm_specs(cfg), "self_attn": L.attention_specs(cfg, tp_size),
+                "norm_x": norm_specs(cfg), "cross_attn": L.attention_specs(cfg, tp_size),
+                "norm2": norm_specs(cfg), "mlp": L.mlp_specs(cfg)}
+    stack = lambda leaf: jax.tree.map(lambda ax: (None,) + ax, leaf,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+    return {
+        "embed": L.embedding_specs(cfg),
+        "enc_layers": stack(enc_leaf),
+        "enc_norm": norm_specs(cfg),
+        "dec_layers": stack(dec_leaf),
+        "final_norm": norm_specs(cfg),
+    }
+
+
+def encode(params, frames, cfg: ArchConfig):
+    """frames [B, T_enc, d] (stub frontend output) -> [B, T_enc, d]."""
+    dt = cfg.activation_dtype
+    B, T, _ = frames.shape
+    pos = L.sincos_positions(jnp.arange(T), cfg.d_model, dtype=dt)
+    x = frames.astype(dt) + pos[None]
+
+    def body(x, lp):
+        h = L.norm_apply(lp["norm1"], x, cfg)
+        q, k, v = (jnp.einsum("btd,dhk->bthk", h, lp["attn"][w].astype(dt))
+                   for w in ("wq", "wk", "wv"))
+        if cfg.attn_bias:
+            q = q + lp["attn"]["bq"].astype(dt)
+            k = k + lp["attn"]["bk"].astype(dt)
+            v = v + lp["attn"]["bv"].astype(dt)
+        out = L.flash_attention(q, k, v, causal=False, window=0)
+        y = jnp.einsum("bthk,hkd->btd", out, lp["attn"]["wo"].astype(dt))
+        if cfg.attn_bias:
+            y = y + lp["attn"]["bo"].astype(dt)
+        x = x + y
+        g = L.norm_apply(lp["norm2"], x, cfg)
+        return x + L.mlp_apply(lp["mlp"], g, cfg), None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    else:
+        for i in range(cfg.enc_layers):
+            x, _ = body(x, jax.tree.map(lambda v: v[i], params["enc_layers"]))
+    return L.norm_apply(params["enc_norm"], x, cfg)
+
+
+def _cross_kv(lp, enc_out, cfg):
+    dt = enc_out.dtype
+    k = jnp.einsum("btd,dhk->bthk", enc_out, lp["cross_attn"]["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", enc_out, lp["cross_attn"]["wv"].astype(dt))
+    if cfg.attn_bias:
+        k = k + lp["cross_attn"]["bk"].astype(dt)
+        v = v + lp["cross_attn"]["bv"].astype(dt)
+    return k, v
+
+
+def init_encdec_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype):
+    n = cfg.n_layers
+    proto = L.init_attn_cache(cfg, batch, max_seq, dtype, window=0)
+    self_attn = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), proto)
+    KV, hd = cfg.n_kv, cfg.hd
+    return EncDecCache(
+        self_attn=self_attn,
+        cross_k=jnp.zeros((n, batch, cfg.enc_frames, KV, hd), dtype),
+        cross_v=jnp.zeros((n, batch, cfg.enc_frames, KV, hd), dtype),
+    )
+
+
+def encdec_cache_specs(cfg: ArchConfig, tp_size: int = 0, seq_len: int = 0):
+    kv_ax = "tp" if (tp_size and cfg.n_kv % tp_size == 0) else None
+    seq_ax = None if kv_ax == "tp" else "sp"
+    spec = (None, "dp", seq_ax, kv_ax, None)
+    return EncDecCache(
+        self_attn=L.AttnCache(k=spec, v=spec, length=(), window=0),
+        cross_k=(None, "dp", None, kv_ax, None),
+        cross_v=(None, "dp", None, kv_ax, None),
+    )
+
+
+def decode_forward(params, tokens, enc_out, cfg: ArchConfig, *, mode="train",
+                   cache: Optional[EncDecCache] = None):
+    """Decoder pass. enc_out may be None when `cache` carries cross K/V.
+
+    Returns (logits, cache', aux)."""
+    dt = cfg.activation_dtype
+    x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(dt)
+    x = shard_hint(x, "dp", None, None)
+    B, T = x.shape[:2]
+    if mode == "decode":
+        pos_idx = cache.self_attn.length[0]
+        pos = L.sincos_positions(pos_idx[None, None], cfg.d_model, dtype=dt)
+        x = x + pos
+    else:
+        pos = L.sincos_positions(jnp.arange(T), cfg.d_model, dtype=dt)
+        x = x + pos[None]
+
+    precomp = cache is not None and enc_out is None
+
+    def body(carry, xs):
+        x = carry
+        lp, ac, ck, cv = xs
+        h = L.norm_apply(lp["norm1"], x, cfg)
+        y, ac = L.attn_apply(lp["self_attn"], h, cfg, mode=mode, use_rope=False,
+                             cache=ac)
+        x = x + y
+        # cross attention
+        hx = L.norm_apply(lp["norm_x"], x, cfg)
+        if precomp:
+            k, v = ck, cv
+        else:
+            k, v = _cross_kv(lp, enc_out, cfg)
+        mask = jnp.ones((B, k.shape[1]), bool)
+        y, _ = L.attn_apply(lp["cross_attn"], hx, cfg, mode="decode" if mode == "decode" else mode,
+                            use_rope=False, kv_override=(k, v, mask))
+        x = x + y
+        g = L.norm_apply(lp["norm2"], x, cfg)
+        x = x + L.mlp_apply(lp["mlp"], g, cfg)
+        return x, (ac, k.astype(dt), v.astype(dt))
+
+    if mode == "train" and cfg.remat != "none":
+        body = jax.checkpoint(body)
+
+    ac = cache.self_attn if cache is not None else None
+    ck = cache.cross_k if cache is not None else None
+    cv = cache.cross_v if cache is not None else None
+    if cfg.scan_layers:
+        x, (ac_new, ck_new, cv_new) = jax.lax.scan(
+            body, x, (params["dec_layers"], ac, ck, cv))
+    else:
+        outs = []
+        for i in range(cfg.n_layers):
+            xs_i = jax.tree.map(lambda v: v[i],
+                                (params["dec_layers"], ac, ck, cv))
+            x, o = body(x, xs_i)
+            outs.append(o)
+        stacked = jax.tree.map(lambda *v: jnp.stack(v), *outs)
+        ac_new, ck_new, cv_new = stacked
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"]["table"].astype(x.dtype))
+    logits = shard_hint(logits, "dp", None, "tp")
+    new_cache = None
+    if cache is not None:
+        new_cache = EncDecCache(self_attn=ac_new, cross_k=ck_new, cross_v=cv_new)
+    return logits, new_cache, jnp.zeros((), jnp.float32)

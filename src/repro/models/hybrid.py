@@ -1,0 +1,191 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* (weight-tied)
+attention+MLP block applied every `shared_attn_every` backbone layers.
+
+Structure (54 layers, shared_every=6 -> 9 groups):
+    [6 x mamba2] -> shared_block -> [6 x mamba2] -> shared_block -> ...
+The shared block has a single weight copy but a *per-site* KV cache
+([n_groups, ...]). The published model adds per-site LoRAs on the shared
+block; we omit them (noted in DESIGN.md) — the compute/memory structure is
+unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import mamba2 as M2
+from .config import ArchConfig
+from .sharding import shard_hint
+
+__all__ = ["init_hybrid_params", "hybrid_param_specs", "hybrid_forward",
+           "init_hybrid_cache", "hybrid_cache_specs", "HybridCache"]
+
+
+@dataclasses.dataclass
+class HybridCache:
+    ssm: M2.SSMCache               # [n_groups, group_size, ...] leaves
+    attn: Optional[L.AttnCache]    # [n_groups, ...] leaves
+
+
+jax.tree_util.register_dataclass(
+    HybridCache, data_fields=["ssm", "attn"], meta_fields=[])
+
+
+def _groups(cfg: ArchConfig):
+    g = cfg.shared_attn_every
+    assert cfg.n_layers % g == 0, (cfg.n_layers, g)
+    return cfg.n_layers // g, g
+
+
+def _init_mamba_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"norm": L.init_norm(cfg), "mamba": M2.init_mamba2(k2, cfg)}
+
+
+def init_hybrid_params(key, cfg: ArchConfig):
+    ng, gs = _groups(cfg)
+    ke, km, ka, kl, kn = jax.random.split(key, 5)
+    mkeys = jax.random.split(km, ng * gs).reshape(ng, gs, 2)
+    mamba = jax.vmap(jax.vmap(lambda k: _init_mamba_layer(k, cfg)))(mkeys)
+    k1, k2 = jax.random.split(ka)
+    shared = {
+        "norm1": L.init_norm(cfg),
+        "attn": L.init_attention(k1, cfg),
+        "norm2": L.init_norm(cfg),
+        "mlp": L.init_mlp(k2, cfg),
+    }
+    p = {
+        "embed": L.init_embedding(ke, cfg),
+        "mamba": mamba,
+        "shared": shared,
+        "final_norm": L.init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = {"w": jax.random.normal(kn, (cfg.d_model, cfg.vocab),
+                                               jnp.float32) / (cfg.d_model ** 0.5)}
+    return p
+
+
+def hybrid_param_specs(cfg: ArchConfig, tp_size: int = 0):
+    from .layers import norm_specs
+    mamba_leaf = {"norm": norm_specs(cfg), "mamba": M2.mamba2_specs(cfg, tp_size)}
+    mamba = jax.tree.map(lambda ax: (None, None) + ax, mamba_leaf,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    s = {
+        "embed": L.embedding_specs(cfg),
+        "mamba": mamba,
+        "shared": {
+            "norm1": norm_specs(cfg),
+            "attn": L.attention_specs(cfg, tp_size),
+            "norm2": norm_specs(cfg),
+            "mlp": L.mlp_specs(cfg),
+        },
+        "final_norm": norm_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = {"w": ("fsdp", "tp")}
+    return s
+
+
+def init_hybrid_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype):
+    ng, gs = _groups(cfg)
+    ssm_proto = M2.init_ssm_cache(cfg, batch, dtype)
+    ssm = jax.tree.map(lambda x: jnp.broadcast_to(x[None, None], (ng, gs) + x.shape),
+                       ssm_proto)
+    attn_proto = L.init_attn_cache(cfg, batch, max_seq, dtype, window=cfg.swa_window)
+    attn = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (ng,) + x.shape), attn_proto)
+    return HybridCache(ssm=ssm, attn=attn)
+
+
+def hybrid_cache_specs(cfg: ArchConfig, tp_size: int = 0, seq_len: int = 0):
+    kv_ax = "tp" if (tp_size and cfg.n_kv % tp_size == 0) else None
+    seq_ax = None if kv_ax == "tp" else "sp"
+    window = cfg.swa_window if (cfg.swa_window and seq_len and cfg.swa_window < seq_len) else 0
+    return HybridCache(
+        ssm=M2.SSMCache(state=(None, None, "dp", "tp", None, None),
+                        conv=(None, None, "dp", None, "tp"), length=()),
+        attn=L.AttnCache(k=(None, "dp", seq_ax, kv_ax, None),
+                         v=(None, "dp", seq_ax, kv_ax, None),
+                         length=(), window=window),
+    )
+
+
+def _shared_block(p, x, cfg, *, positions, mode, cache):
+    h = L.norm_apply(p["norm1"], x, cfg)
+    attn_out, cache = L.attn_apply(p["attn"], h, cfg, positions=positions,
+                                   mode=mode, cache=cache)
+    h2 = x + attn_out
+    g = L.norm_apply(p["norm2"], h2, cfg)
+    return h2 + L.mlp_apply(p["mlp"], g, cfg), cache
+
+
+def hybrid_forward(params, tokens, cfg: ArchConfig, *, mode="train",
+                   cache: Optional[HybridCache] = None,
+                   positions: Optional[jnp.ndarray] = None):
+    dt = cfg.activation_dtype
+    x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(dt)
+    x = shard_hint(x, "dp", None, None)
+    B, T = x.shape[:2]
+    if positions is None and mode != "decode":
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    def mamba_body(carry, xs):
+        x = carry
+        lp, sc = xs
+        h = L.norm_apply(lp["norm"], x, cfg)
+        y, sc = M2.mamba2_apply(lp["mamba"], h, cfg, mode=mode, cache=sc)
+        return x + y, sc
+
+    def group_body(carry, xs):
+        x = carry
+        gp, gsc, gac = xs
+        if cfg.scan_layers:
+            x, sc_new = jax.lax.scan(mamba_body, x, (gp, gsc))
+        else:
+            _, gs = _groups(cfg)
+            outs = []
+            for i in range(gs):
+                lp = jax.tree.map(lambda v: v[i], gp)
+                lsc = jax.tree.map(lambda v: v[i], gsc) if gsc is not None else None
+                x, s_new = mamba_body(x, (lp, lsc))
+                outs.append(s_new)
+            sc_new = (jax.tree.map(lambda *v: jnp.stack(v), *outs)
+                      if gsc is not None else None)
+        x, ac_new = _shared_block(params["shared"], x, cfg, positions=positions,
+                                  mode=mode, cache=gac)
+        return x, (sc_new, ac_new)
+
+    if mode == "train" and cfg.remat != "none":
+        group_body = jax.checkpoint(group_body)
+
+    sc = cache.ssm if cache is not None else None
+    ac = cache.attn if cache is not None else None
+    if cfg.scan_layers:
+        x, (sc_new, ac_new) = jax.lax.scan(group_body, x, (params["mamba"], sc, ac))
+    else:
+        ng, _ = _groups(cfg)
+        sc_l, ac_l = [], []
+        for g in range(ng):
+            gp = jax.tree.map(lambda v: v[g], params["mamba"])
+            gsc = jax.tree.map(lambda v: v[g], sc) if sc is not None else None
+            gac = jax.tree.map(lambda v: v[g], ac) if ac is not None else None
+            x, (s_new, a_new) = group_body(x, (gp, gsc, gac))
+            sc_l.append(s_new)
+            ac_l.append(a_new)
+        sc_new = (jax.tree.map(lambda *v: jnp.stack(v), *sc_l)
+                  if sc is not None else None)
+        ac_new = (jax.tree.map(lambda *v: jnp.stack(v), *ac_l)
+                  if ac is not None else None)
+
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("btd,vd->btv", x, params["embed"]["table"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("btd,dv->btv", x, params["lm_head"]["w"].astype(x.dtype))
+    logits = shard_hint(logits, "dp", None, "tp")
+    new_cache = HybridCache(ssm=sc_new, attn=ac_new) if cache is not None else None
+    return logits, new_cache, jnp.zeros((), jnp.float32)

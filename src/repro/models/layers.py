@@ -1,0 +1,452 @@
+"""Shared neural layers: norms, embeddings, RoPE, attention (flash-chunked
+train/prefill + cached decode), MLP. Pure JAX; params are nested dicts with a
+parallel tree of logical sharding axes (see sharding.py).
+
+Attention sharding policy (resolved per arch x mesh):
+  * Q heads shard over `tp` when H % |tp| == 0 (9/10 assigned archs), else
+    head_dim shards (contraction-sharded attention, all-reduce epilogue).
+  * KV heads shard only when KV % |tp| == 0 (GQA usually replicates KV).
+  * Decode KV caches shard their *sequence* dim over `sp` when KV heads can't
+    absorb the axis — flash-decoding's partial-softmax combine then emerges
+    as two small all-reduces (max and sum) instead of gathering the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "init_norm", "norm_apply", "init_embedding",
+    "rope", "sincos_positions",
+    "init_attention", "attention_specs", "flash_attention", "decode_attention",
+    "attn_apply", "init_mlp", "mlp_specs", "mlp_apply",
+]
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg, d=None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_specs(cfg):
+    s = {"scale": (None,)}
+    if cfg.norm == "layernorm":
+        s["bias"] = (None,)
+    return s
+
+
+def norm_apply(p, x, cfg, eps=None):
+    eps = eps or cfg.norm_eps
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding / positions
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg):
+    scale = 1.0 / math.sqrt(cfg.d_model)
+    emb = jax.random.normal(key, (cfg.vocab, cfg.d_model), jnp.float32) * scale
+    return {"table": emb}
+
+
+def embedding_specs(cfg):
+    return {"table": ("tp", "fsdp")}
+
+
+def sincos_positions(positions, d, base=10000.0, dtype=jnp.float32):
+    """Sinusoidal position embeddings [..., d] for arbitrary positions."""
+    half = d // 2
+    freq = jnp.exp(-math.log(base) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def rope(x, positions, theta=10000.0):
+    """Rotary embedding. x [..., T, H, hd], positions [..., T]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq          # [..., T, half]
+    cos = jnp.cos(ang)[..., None, :]                               # [..., T, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, d=None):
+    d = d or cfg.d_model
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(H * hd)
+    p = {
+        "wq": jax.random.normal(k1, (d, H, hd), jnp.float32) * s_in,
+        "wk": jax.random.normal(k2, (d, KV, hd), jnp.float32) * s_in,
+        "wv": jax.random.normal(k3, (d, KV, hd), jnp.float32) * s_in,
+        "wo": jax.random.normal(k4, (H, hd, d), jnp.float32) * s_out,
+    }
+    if cfg.use_qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((H, hd), jnp.float32)
+        p["bk"] = jnp.zeros((KV, hd), jnp.float32)
+        p["bv"] = jnp.zeros((KV, hd), jnp.float32)
+        p["bo"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def attention_specs(cfg, tp_size: int = 0):
+    """Weight specs. Head dims shard on tp when divisible, else the hidden
+    (d) dim takes tp (contraction-sharded); fsdp always on the other dim."""
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q_head_ax = "tp" if (tp_size == 0 or H % max(tp_size, 1) == 0) else None
+    kv_head_ax = "tp" if (tp_size and KV % tp_size == 0) else None
+    hd_ax = None
+    if q_head_ax is None and (tp_size and hd % tp_size == 0):
+        hd_ax = "tp"
+    s = {
+        "wq": ("fsdp", q_head_ax, hd_ax),
+        "wk": ("fsdp", kv_head_ax, hd_ax if kv_head_ax is None and hd_ax else None),
+        "wv": ("fsdp", kv_head_ax, hd_ax if kv_head_ax is None and hd_ax else None),
+        "wo": (q_head_ax, hd_ax, "fsdp"),
+    }
+    if cfg.use_qk_norm:
+        s["q_norm"] = (None,)
+        s["k_norm"] = (None,)
+    if cfg.attn_bias:
+        s["bq"] = (q_head_ax, hd_ax)
+        s["bk"] = (kv_head_ax, None)
+        s["bv"] = (kv_head_ax, None)
+        s["bo"] = (None,)
+    return s
+
+
+def _qk_norm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def _project_qkv(p, x, cfg, positions):
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"].astype(dt))
+    if cfg.attn_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.use_qk_norm:
+        q = _qk_norm(q, p["q_norm"], cfg.norm_eps)
+        k = _qk_norm(k, p["k_norm"], cfg.norm_eps)
+    if positions is not None:  # rope (None for whisper-style abs positions)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, chunk_q=512, chunk_k=512,
+                    q_offset=0, unroll_q=False):
+    """Chunked (flash-style) attention with O(T * chunk_k) live memory.
+
+    q [B, Tq, H, hd]; k, v [B, Tk, KV, hd] (GQA: KV divides H). `window` > 0
+    masks keys older than `window` (sliding-window attention). The inner loop
+    over key chunks skips out-of-band chunks, so SWA prefill compute is
+    O(T * W), not O(T^2). Two drivers:
+      * unroll_q=False — lax.scan over q chunks with *dynamic* k bounds
+        (small HLO; inference path, not reverse-differentiable);
+      * unroll_q=True  — python loop over q chunks with *static* k bounds
+        (training path: differentiable AND keeps the causal/SWA skipping).
+    """
+    B, Tq, H, hd = q.shape
+    _, Tk, KV, _ = k.shape
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    chunk_q = min(chunk_q, Tq)
+    chunk_k = min(chunk_k, Tk)
+    nq = -(-Tq // chunk_q)
+    nk_total = -(-Tk // chunk_k)
+    orig_dtype = q.dtype
+    Tk_pad = nk_total * chunk_k
+    if Tk_pad != Tk:
+        k = jnp.pad(k, ((0, 0), (0, Tk_pad - Tk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Tk_pad - Tk), (0, 0), (0, 0)))
+
+    def q_chunk(qi, q_start, qc):
+        qpos = q_offset + q_start + jnp.arange(chunk_q)
+
+        if causal:
+            hi = (q_offset + q_start + chunk_q + chunk_k - 1) // chunk_k
+            hi = min(hi, nk_total) if isinstance(hi, int) else jnp.minimum(hi, nk_total)
+        else:
+            hi = nk_total
+        if window > 0:
+            lo = (q_offset + q_start - window) // chunk_k
+            lo = max(lo, 0) if isinstance(lo, int) else jnp.maximum(lo, 0)
+        else:
+            lo = 0
+
+        def k_step(ki, carry):
+            m, l, acc = carry
+            k_start = ki * chunk_k
+            kc = jax.lax.dynamic_slice_in_dim(k, k_start, chunk_k, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, k_start, chunk_k, axis=1)
+            kc = jnp.repeat(kc, G, axis=2)   # [B, ck, H, hd]
+            vc = jnp.repeat(vc, G, axis=2)
+            s = jnp.einsum("bqhk,bshk->bhqs", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = k_start + jnp.arange(chunk_k)
+            mask = jnp.ones((chunk_q, chunk_k), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window > 0:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            mask &= (kpos < Tk)[None, :]
+            s = jnp.where(mask[None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[None, None], p, 0.0)
+            corr = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqs,bshk->bhqk", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return m_new, l_new, acc_new
+
+        m0 = jnp.full((B, H, chunk_q), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, chunk_q), jnp.float32)
+        a0 = jnp.zeros((B, H, chunk_q, hd), jnp.float32)
+        m, l, acc = jax.lax.fori_loop(lo, hi, k_step, (m0, l0, a0))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return jnp.transpose(out, (0, 2, 1, 3)).astype(orig_dtype)
+
+    Tq_pad = nq * chunk_q
+    if Tq_pad != Tq:
+        q = jnp.pad(q, ((0, 0), (0, Tq_pad - Tq), (0, 0), (0, 0)))
+
+    if unroll_q:
+        # static q-chunk indices -> static fori bounds -> differentiable
+        assert isinstance(q_offset, int)
+        outs = []
+        for qi in range(nq):
+            q_start = qi * chunk_q
+            qc = q[:, q_start:q_start + chunk_q]
+            outs.append(q_chunk(qi, q_start, qc))
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        def q_step(_, qi):
+            q_start = qi * chunk_q
+            qc = jax.lax.dynamic_slice_in_dim(q, q_start, chunk_q, axis=1)
+            return None, q_chunk(qi, q_start, qc)
+
+        _, chunks = jax.lax.scan(q_step, None, jnp.arange(nq))
+        out = jnp.moveaxis(chunks, 0, 1).reshape(B, Tq_pad, H, hd)
+    return out[:, :Tq]
+
+
+def decode_attention(q, k_cache, v_cache, valid_mask):
+    """Single-token decode against a (possibly seq-sharded) KV cache.
+
+    q [B, 1, H, hd]; caches [B, S, KV, hd]; valid_mask [B, S] bool. Softmax
+    reductions over S lower to all-reduces when S is sharded (flash-decoding
+    communication profile under GSPMD).
+    """
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    q5 = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", q5, k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    s = jnp.where(valid_mask[:, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isneginf(m), 0.0, m)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid_mask[:, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(l, 1e-20)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+@dataclasses.dataclass
+class AttnCache:
+    """Functional KV cache for one attention site."""
+
+    k: jnp.ndarray       # [B, S, KV, hd]
+    v: jnp.ndarray
+    length: jnp.ndarray  # [] int32 — tokens written so far (absolute position)
+    window: int = 0      # >0: ring buffer of this many slots
+
+
+jax.tree_util.register_dataclass(
+    AttnCache, data_fields=["k", "v", "length"], meta_fields=["window"])
+
+
+def init_attn_cache(cfg, batch, seq, dtype, window=0):
+    KV, hd = cfg.n_kv, cfg.hd
+    slots = min(seq, window) if window > 0 else seq
+    return AttnCache(
+        k=jnp.zeros((batch, slots, KV, hd), dtype),
+        v=jnp.zeros((batch, slots, KV, hd), dtype),
+        length=jnp.zeros((), jnp.int32),
+        window=window if window and window < seq else 0,
+    )
+
+
+def cache_update(cache: AttnCache, k_new, v_new):
+    """Append k/v [B, 1, KV, hd]; ring-buffer write for SWA caches."""
+    pos = cache.length
+    slot = pos % cache.k.shape[1] if cache.window else jnp.minimum(pos, cache.k.shape[1] - 1)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+    return AttnCache(k=k, v=v, length=pos + 1, window=cache.window)
+
+
+def cache_valid_mask(cache: AttnCache):
+    S = cache.k.shape[1]
+    idx = jnp.arange(S)
+    if cache.window:
+        return jnp.broadcast_to(idx[None, :] < jnp.minimum(cache.length + 1, S),
+                                (cache.k.shape[0], S))
+    return jnp.broadcast_to(idx[None, :] <= cache.length, (cache.k.shape[0], S))
+
+
+def attn_apply(p, x, cfg, *, positions=None, mode="train", use_rope=True,
+               cache: Optional[AttnCache] = None,
+               kv_override=None, chunk_q=512, chunk_k=512):
+    """Full attention block body (projection -> attention -> output).
+
+    mode: "train"/"prefill" (chunked flash) | "decode" (cached single token)
+    use_rope: rotary positions (decode derives the position from the cache)
+    kv_override: (k, v, mask) for cross-attention (whisper decoder).
+    """
+    dt = x.dtype
+    if mode == "decode":
+        B = x.shape[0]
+        if kv_override is not None:
+            q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+            if cfg.attn_bias:
+                q = q + p["bq"].astype(dt)
+            if cfg.use_qk_norm:
+                q = _qk_norm(q, p["q_norm"], cfg.norm_eps)
+            k, v, mask = kv_override
+            out = decode_attention(q, k, v, mask)
+            new_cache = cache
+        else:
+            pos = cache.length
+            q, k, v = _project_qkv(p, x, cfg,
+                                   jnp.full((B, 1), pos, jnp.int32) if use_rope else None)
+            new_cache = cache_update(cache, k, v)
+            out = decode_attention(q, new_cache.k, new_cache.v,
+                                   cache_valid_mask(cache))
+        y = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(dt))
+        if cfg.attn_bias:
+            y = y + p["bo"].astype(dt)
+        return y, new_cache
+
+    # train / prefill
+    if kv_override is not None:
+        q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+        if cfg.attn_bias:
+            q = q + p["bq"].astype(dt)
+        if cfg.use_qk_norm:
+            q = _qk_norm(q, p["q_norm"], cfg.norm_eps)
+        k, v, _ = kv_override
+        out = flash_attention(q, k, v, causal=False, window=0,
+                              chunk_q=chunk_q, chunk_k=chunk_k)
+    else:
+        q, k, v = _project_qkv(p, x, cfg, positions if use_rope else None)
+        out = flash_attention(q, k, v, causal=True, window=cfg.swa_window,
+                              chunk_q=chunk_q, chunk_k=chunk_k,
+                              unroll_q=(mode == "train"))
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(dt))
+    if cfg.attn_bias:
+        y = y + p["bo"].astype(dt)
+    if mode == "prefill" and cache is not None and kv_override is None:
+        slots = cache.k.shape[1]
+        T = k.shape[1]
+        if cache.window and T > slots:
+            k_w = k[:, -slots:]
+            v_w = v[:, -slots:]
+            # ring layout: slot = pos % window  (rolled[p % W] = token at p)
+            pos0 = T - slots
+            roll = pos0 % slots
+            k_w = jnp.roll(k_w, roll, axis=1)
+            v_w = jnp.roll(v_w, roll, axis=1)
+            cache = AttnCache(k=k_w.astype(cache.k.dtype), v=v_w.astype(cache.v.dtype),
+                              length=jnp.asarray(T, jnp.int32), window=cache.window)
+        else:
+            k_p = jnp.zeros_like(cache.k).at[:, :T].set(k.astype(cache.k.dtype))
+            v_p = jnp.zeros_like(cache.v).at[:, :T].set(v.astype(cache.v.dtype))
+            cache = AttnCache(k=k_p, v=v_p, length=jnp.asarray(T, jnp.int32),
+                              window=cache.window)
+        return y, cache
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, d=None, ff=None):
+    d = d or cfg.d_model
+    ff = ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(ff)
+    p = {"wi": jax.random.normal(k1, (d, ff), jnp.float32) * s_in,
+         "wo": jax.random.normal(k2, (ff, d), jnp.float32) * s_out}
+    if cfg.mlp_glu:
+        p["wg"] = jax.random.normal(k3, (d, ff), jnp.float32) * s_in
+    return p
+
+
+def mlp_specs(cfg):
+    s = {"wi": ("fsdp", "tp"), "wo": ("tp", "fsdp")}
+    if cfg.mlp_glu:
+        s["wg"] = ("fsdp", "tp")
+    return s
+
+
+def _act(x, kind):
+    return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x)
+
+
+def mlp_apply(p, x, cfg):
+    dt = x.dtype
+    h = jnp.einsum("btd,df->btf", x, p["wi"].astype(dt))
+    if cfg.mlp_glu:
+        g = jnp.einsum("btd,df->btf", x, p["wg"].astype(dt))
+        h = _act(h, cfg.act) * g
+    else:
+        h = _act(h, cfg.act)
+    return jnp.einsum("btf,fd->btd", h, p["wo"].astype(dt))

@@ -1,0 +1,237 @@
+"""Mamba2 (SSD — state-space duality) block: chunked-scan train/prefill and
+O(1)-state recurrent decode.
+
+Discrete SSD recurrence per head (state N = ssm_state, head dim P):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t x_t^T     h in R^{P x N}
+    y_t = h_t C_t + D x_t
+
+Training uses the chunked matmul form (Mamba2 paper Sec. 6): the sequence is
+split into chunks of length `ssm_chunk`; intra-chunk contributions are a
+masked [cl, cl] decay matmul (MXU-friendly), inter-chunk state is carried by
+a lax.scan — compute O(T * cl) instead of O(T^2), state O(B*H*P*N).
+
+Sharding: the inner dim (d_inner = expand * d_model) carries "tp": heads are
+independent, so head-parallel == tensor-parallel with zero collectives inside
+the scan; in/out projections reduce over d_model ("fsdp" on that dim).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_mamba2", "mamba2_specs", "mamba2_apply", "init_ssm_cache", "SSMCache"]
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class SSMCache:
+    state: jnp.ndarray      # [B, H, P, N] float32
+    conv: jnp.ndarray       # [B, conv_w - 1, conv_dim]
+    length: jnp.ndarray     # [] int32
+
+
+jax.tree_util.register_dataclass(
+    SSMCache, data_fields=["state", "conv", "length"], meta_fields=[])
+
+
+def _dims(cfg):
+    di = cfg.d_inner
+    nh = cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = di + 2 * N          # conv over (x, B, C); n_groups = 1
+    return di, nh, P, N, conv_dim
+
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    di, nh, P, N, conv_dim = _dims(cfg)
+    d_in_proj = 2 * di + 2 * N + nh        # z, x, B, C, dt
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    dt = jnp.exp(jax.random.uniform(k3, (nh,), jnp.float32)
+                 * (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": jax.random.normal(k1, (d, d_in_proj), jnp.float32) * s,
+        "conv_w": jax.random.normal(k2, (cfg.ssm_conv, conv_dim), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(k4, (di, d), jnp.float32) / math.sqrt(di),
+    }
+
+
+def mamba2_specs(cfg, tp_size: int = 0):
+    return {
+        "in_proj": ("fsdp", "tp"),
+        "conv_w": (None, "tp"),
+        "conv_b": ("tp",),
+        "A_log": ("tp",),
+        "D": ("tp",),
+        "dt_bias": ("tp",),
+        "norm_scale": ("tp",),
+        "out_proj": ("tp", "fsdp"),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    di, nh, P, N, conv_dim = _dims(cfg)
+    z = zxbcdt[..., :di]
+    rest = zxbcdt[..., di:di + conv_dim]     # (x, B, C) -> conv input
+    dt = zxbcdt[..., di + conv_dim:]
+    return z, rest, dt
+
+
+def _gated_rmsnorm(y, z, scale, eps):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
+
+
+def _causal_conv(x, w, b):
+    """x [B, T, C], depthwise causal conv, kernel w [K, C]."""
+    K = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        out = out + pads[:, i:i + x.shape[1]].astype(jnp.float32) * w[i]
+    return jax.nn.silu(out + b).astype(x.dtype)
+
+
+def _ssd_chunked(xh, dt, A, B_, C_, chunk, unroll=False):
+    """Chunked SSD scan.
+
+    xh [B, T, H, P]; dt [B, T, H] (post-softplus); A [H] (negative);
+    B_, C_ [B, T, N]  (n_groups=1, shared across heads).
+    `unroll` replaces the chunk lax.scan with a python loop (analysis mode:
+    XLA cost_analysis counts a scan body once). Returns y [B, T, H, P].
+    """
+    Bsz, T, H, P = xh.shape
+    N = B_.shape[-1]
+    nc = T // chunk
+    cl = chunk
+    xc = xh.reshape(Bsz, nc, cl, H, P)
+    dtc = dt.reshape(Bsz, nc, cl, H)
+    Bc = B_.reshape(Bsz, nc, cl, N)
+    Cc = C_.reshape(Bsz, nc, cl, N)
+
+    dA = dtc * A[None, None, None, :]                   # [B, nc, cl, H] (<= 0)
+    cum = jnp.cumsum(dA, axis=2)                        # within-chunk cumsum
+
+    def chunk_step(h_prev, inp):
+        xck, dtck, Bck, Cck, dAck, cumk = inp            # per-chunk, batch-major
+        # intra-chunk: decay matrix Lij = exp(cum_i - cum_j) for i >= j
+        diff = cumk[:, :, None, :] - cumk[:, None, :, :]          # [B, cl, cl, H]
+        tri = jnp.tril(jnp.ones((cl, cl), bool))
+        L = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        # scores: (C_i . B_j) * L_ij * dt_j
+        cb = jnp.einsum("bin,bjn->bij", Cck, Bck)                 # [B, cl, cl]
+        w = cb[:, :, :, None] * L * dtck[:, None, :, :]           # [B, cl, cl, H]
+        y_diag = jnp.einsum("bijh,bjhp->bihp", w, xck)
+        # contribution of carried state: y_i += exp(cum_i) * C_i h_prev
+        decay_in = jnp.exp(cumk)                                  # [B, cl, H]
+        y_off = jnp.einsum("bin,bhpn->bihp", Cck, h_prev) * decay_in[..., None]
+        # new carried state: h = exp(sum dA) h_prev + sum_j exp(cum_last - cum_j) dt_j B_j x_j
+        tot = cumk[:, -1, :]                                      # [B, H]
+        decay_out = jnp.exp(tot[:, None, :] - cumk)               # [B, cl, H]
+        contrib = jnp.einsum("bjh,bjn,bjhp->bhpn",
+                             decay_out * dtck, Bck, xck)
+        h_new = jnp.exp(tot)[:, :, None, None] * h_prev + contrib
+        return h_new, y_diag + y_off
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(xc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dtc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dA, 1, 0),
+          jnp.moveaxis(cum, 1, 0))
+    if unroll:
+        h = h0
+        ys_l = []
+        for i in range(nc):
+            h, y_i = chunk_step(h, jax.tree.map(lambda v: v[i], xs))
+            ys_l.append(y_i)
+        h_last, ys = h, jnp.stack(ys_l)
+    else:
+        h_last, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, T, H, P)
+    return y, h_last
+
+
+def init_ssm_cache(cfg, batch, dtype=jnp.float32):
+    di, nh, P, N, conv_dim = _dims(cfg)
+    return SSMCache(
+        state=jnp.zeros((batch, nh, P, N), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def mamba2_apply(p, x, cfg, *, mode="train", cache: SSMCache | None = None):
+    """x [B, T, d] -> (y [B, T, d], cache')."""
+    Bsz, T, d = x.shape
+    di, nh, P, N, conv_dim = _dims(cfg)
+    dtype = x.dtype
+    zxbcdt = jnp.einsum("btd,de->bte", x, p["in_proj"].astype(dtype))
+    z, conv_in, dt_raw = _split_proj(zxbcdt, cfg)
+
+    if mode == "decode":
+        assert cache is not None and T == 1
+        # roll conv state
+        window = jnp.concatenate([cache.conv, conv_in.astype(cache.conv.dtype)], axis=1)
+        conv_out = jnp.sum(window.astype(jnp.float32)
+                           * p["conv_w"][None], axis=1) + p["conv_b"]
+        conv_out = jax.nn.silu(conv_out)[:, None, :]            # [B, 1, conv_dim]
+        new_conv = window[:, 1:]
+        xh = conv_out[..., :di].reshape(Bsz, nh, P).astype(jnp.float32)
+        B_ = conv_out[..., di:di + N].reshape(Bsz, N).astype(jnp.float32)
+        C_ = conv_out[..., di + N:].reshape(Bsz, N).astype(jnp.float32)
+        dtv = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B, H]
+        A = -jnp.exp(p["A_log"])
+        dA = jnp.exp(dtv * A)                                    # [B, H]
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dtv, B_, xh)
+        state = cache.state * dA[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, C_) + p["D"][None, :, None] * xh
+        y = y.reshape(Bsz, 1, di).astype(dtype)
+        y = _gated_rmsnorm(y, z, p["norm_scale"], cfg.norm_eps)
+        out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(dtype))
+        return out, SSMCache(state=state, conv=new_conv, length=cache.length + 1)
+
+    # train / prefill: chunked scan
+    chunk = min(cfg.ssm_chunk, T)
+    pad = (-T) % chunk
+    if pad and mode == "prefill":
+        raise ValueError("prefill length must be a multiple of ssm_chunk "
+                         "(padding would corrupt the carried state)")
+    if pad:
+        conv_in = jnp.pad(conv_in, ((0, 0), (0, pad), (0, 0)))
+        dt_raw = jnp.pad(dt_raw, ((0, 0), (0, pad), (0, 0)))
+    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    Tp = T + pad
+    xh = conv_out[..., :di].reshape(Bsz, Tp, nh, P)
+    B_ = conv_out[..., di:di + N]
+    C_ = conv_out[..., di + N:]
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h_last = _ssd_chunked(xh, dtv, A, B_, C_, chunk,
+                             unroll=not cfg.scan_layers)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, Tp, di)[:, :T].astype(dtype)
+    y = _gated_rmsnorm(y, z[:, :T], p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(dtype))
+    new_cache = cache
+    if mode == "prefill":
+        # last (conv_w - 1) raw conv inputs feed the first decode steps
+        conv_hist = jnp.concatenate(
+            [jnp.zeros((Bsz, cfg.ssm_conv - 1, conv_dim), conv_in.dtype), conv_in[:, :T]],
+            axis=1)[:, -(cfg.ssm_conv - 1):]
+        new_cache = SSMCache(state=h_last, conv=conv_hist,
+                             length=jnp.asarray(T, jnp.int32))
+    return out, new_cache

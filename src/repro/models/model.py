@@ -1,0 +1,118 @@
+"""Unified model API over the families (used by training/serving/dryrun).
+
+    model = Model(cfg)
+    params = model.init(key)
+    logits, aux = model.forward_train(params, batch)        # [B, T, V]
+    cache = model.init_cache(batch, max_seq, dtype)
+    logits, cache = model.prefill(params, inputs, cache)
+    logits, cache = model.decode_step(params, tokens, cache)
+
+`param_specs()` / `cache_specs()` return trees of *logical* axis tuples
+(resolved against a mesh by sharding.AxisRules).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec as ED
+from . import hybrid as HY
+from . import stack as ST
+from .config import ArchConfig
+
+__all__ = ["Model"]
+
+
+def is_spec_leaf(x):
+    return isinstance(x, tuple)
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # -- params -------------------------------------------------------------
+    def init(self, key):
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return HY.init_hybrid_params(key, cfg)
+        if cfg.family == "encdec":
+            return ED.init_encdec_params(key, cfg)
+        return ST.init_stack_params(key, cfg)
+
+    def param_specs(self, tp_size: int = 0):
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return HY.hybrid_param_specs(cfg, tp_size)
+        if cfg.family == "encdec":
+            return ED.encdec_param_specs(cfg, tp_size)
+        return ST.stack_param_specs(cfg, tp_size)
+
+    # -- training forward -----------------------------------------------------
+    def forward_train(self, params, batch):
+        """batch: {"tokens": [B, T]} (+ "frames" for encdec). Returns
+        (logits, aux)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        if cfg.family == "hybrid":
+            logits, _, aux = HY.hybrid_forward(params, tokens, cfg, mode="train")
+        elif cfg.family == "encdec":
+            enc_out = ED.encode(params, batch["frames"], cfg)
+            logits, _, aux = ED.decode_forward(params, tokens, enc_out, cfg, mode="train")
+        else:
+            logits, _, aux = ST.stack_forward(params, tokens, cfg, mode="train")
+        return logits, aux
+
+    # -- serving --------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return HY.init_hybrid_cache(cfg, batch, max_seq, dtype)
+        if cfg.family == "encdec":
+            return ED.init_encdec_cache(cfg, batch, max_seq, dtype)
+        return ST.init_stack_cache(cfg, batch, max_seq, dtype)
+
+    def cache_specs(self, tp_size: int = 0, seq_len: int = 0):
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return HY.hybrid_cache_specs(cfg, tp_size, seq_len)
+        if cfg.family == "encdec":
+            return ED.encdec_cache_specs(cfg, tp_size, seq_len)
+        return ST.stack_cache_specs(cfg, tp_size, seq_len)
+
+    def prefill(self, params, batch, cache):
+        """Run the prompt through the model, filling the cache. Returns
+        (last-position logits [B, 1, V], cache')."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        if cfg.family == "hybrid":
+            logits, cache, _ = HY.hybrid_forward(params, tokens, cfg,
+                                                 mode="prefill", cache=cache)
+        elif cfg.family == "encdec":
+            enc_out = ED.encode(params, batch["frames"], cfg)
+            logits, cache, _ = ED.decode_forward(params, tokens, enc_out, cfg,
+                                                 mode="prefill", cache=cache)
+        else:
+            logits, cache, _ = ST.stack_forward(params, tokens, cfg,
+                                                mode="prefill", cache=cache)
+        return logits[:, -1:], cache
+
+    def decode_step(self, params, tokens, cache):
+        """tokens [B, 1] -> (logits [B, 1, V], cache')."""
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            logits, cache, _ = HY.hybrid_forward(params, tokens, cfg,
+                                                 mode="decode", cache=cache)
+        elif cfg.family == "encdec":
+            logits, cache, _ = ED.decode_forward(params, tokens, None, cfg,
+                                                 mode="decode", cache=cache)
+        else:
+            logits, cache, _ = ST.stack_forward(params, tokens, cfg,
+                                                mode="decode", cache=cache)
+        return logits, cache
+
+    # -- convenience ----------------------------------------------------------
+    def param_count(self, params) -> int:
+        return sum(int(x.size) for x in jax.tree.leaves(params))

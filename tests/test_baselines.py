@@ -1,0 +1,59 @@
+"""SRS / QALSH / exact baselines."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines import (build_qalsh, build_srs, exact_knn, exact_knn_np,
+                             qalsh_query, srs_query)
+from repro.core.tuning import overall_ratio
+
+
+def test_exact_knn_matches_numpy(clustered_data):
+    db, q = clustered_data["db"], clustered_data["queries"]
+    ids, d = exact_knn(db, q, k=5)
+    ids_np, d_np = exact_knn_np(db, q, k=5)
+    np.testing.assert_allclose(np.asarray(d), d_np, rtol=1e-4, atol=1e-4)
+    # ids can differ on exact ties; distances must agree
+    assert (np.abs(np.asarray(d)[:, 0] - d_np[:, 0]) < 1e-4).all()
+
+
+def test_srs_reaches_target_ratio(clustered_data):
+    srs = build_srs(clustered_data["db"], m=8)
+    ids, d, checked = srs_query(srs, clustered_data["queries"], k=1, t_prime=800)
+    ratio = overall_ratio(np.asarray(d), clustered_data["gt_dists"][:, :1])
+    assert ratio < 1.05
+    assert int(np.max(np.asarray(checked))) <= 800
+
+
+def test_srs_accuracy_grows_with_tprime(clustered_data):
+    srs = build_srs(clustered_data["db"], m=8)
+    r = []
+    for tp in (8, 64, 1024):
+        _, d, _ = srs_query(srs, clustered_data["queries"], k=1, t_prime=tp)
+        r.append(overall_ratio(np.asarray(d), clustered_data["gt_dists"][:, :1]))
+    assert r[2] <= r[0] + 1e-9
+
+
+def test_srs_index_is_tiny(clustered_data):
+    srs = build_srs(clustered_data["db"], m=8)
+    db_bytes = clustered_data["db"].nbytes
+    assert srs.index_bytes < db_bytes  # m << d
+
+
+def test_qalsh_reaches_target_ratio(clustered_data):
+    q = build_qalsh(clustered_data["db"], K=64)
+    ids, d, checked, rounds = qalsh_query(q, clustered_data["queries"][:16], k=1)
+    ratio = overall_ratio(d, clustered_data["gt_dists"][:16, :1])
+    assert ratio < 1.08
+    assert (rounds >= 1).all()
+
+
+def test_qalsh_collision_counting_superlinear_windows(clustered_data):
+    """More rounds -> wider windows -> more checked candidates."""
+    q = build_qalsh(clustered_data["db"], K=48, collision_ratio=0.9)  # hard to hit
+    _, _, checked_hard, rounds_hard = qalsh_query(q, clustered_data["queries"][:4],
+                                                  k=1, max_rounds=6)
+    q2 = build_qalsh(clustered_data["db"], K=48, collision_ratio=0.3)
+    _, _, checked_easy, rounds_easy = qalsh_query(q2, clustered_data["queries"][:4],
+                                                  k=1, max_rounds=6)
+    assert rounds_hard.mean() >= rounds_easy.mean()

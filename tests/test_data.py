@@ -1,0 +1,54 @@
+"""Synthetic dataset generators (Table 1 shapes/dtypes, NN scaling)."""
+import numpy as np
+import pytest
+
+from repro.data import DATASETS, make_dataset
+
+
+@pytest.mark.parametrize("name,d,dtype_name", [
+    ("sift", 128, "byte"), ("gist", 960, "float"), ("rand", 100, "float"),
+    ("gauss", 512, "float"),
+])
+def test_dataset_shapes(name, d, dtype_name):
+    ds = make_dataset(name, n=2000, n_queries=16, gt_k=10)
+    assert ds.db.shape == (2000, d)
+    assert ds.queries.shape == (16, d)
+    assert ds.dtype_name == dtype_name
+    # NN scaling: median 1-NN distance ~ 1.2
+    assert 1.0 < np.median(ds.gt_dists[:, 0]) < 1.5
+
+
+def test_ground_truth_is_sorted_and_correct():
+    ds = make_dataset("sift", n=1500, n_queries=8, gt_k=5)
+    assert (np.diff(ds.gt_dists, axis=1) >= -1e-6).all()
+    # verify one query against brute force
+    q = ds.queries[0]
+    d = np.sqrt(((ds.db - q) ** 2).sum(1))
+    assert abs(d.min() - ds.gt_dists[0, 0]) < 1e-4
+
+
+def test_difficulty_ordering():
+    """GAUSS (RC 1.14) must be harder than MSONG (RC 4.04, the easiest): the
+    ratio of mean distance to NN distance (relative contrast proxy) must be
+    smaller for the harder set."""
+    sift = make_dataset("msong", n=4000, n_queries=16)
+    gauss = make_dataset("gauss", n=4000, n_queries=16)
+
+    def contrast(ds):
+        # fresh-draw queries only (the last quarter): planted near-duplicate
+        # queries measure jitter scale, not dataset hardness
+        hard = slice(-4, None)
+        rng = np.random.default_rng(0)
+        sample = ds.db[rng.choice(len(ds.db), 500, replace=False)]
+        dmean = np.sqrt(((ds.queries[hard][:, None] - sample[None]) ** 2
+                         ).sum(-1)).mean()
+        return dmean / np.median(ds.gt_dists[hard, 0])
+
+    assert contrast(gauss) < contrast(sift)
+
+
+def test_all_registered_datasets_generate():
+    for name in DATASETS:
+        ds = DATASETS[name](n=500, n_queries=4, gt_k=2)
+        assert ds.db.shape[0] == 500
+        assert np.isfinite(ds.db).all()

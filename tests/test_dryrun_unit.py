@@ -1,0 +1,77 @@
+"""Dry-run machinery unit tests (no 512-device requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.steps import named_shardings_for, batch_logical
+from repro.models.sharding import AxisRules
+
+
+def _parse(text):
+    from repro.launch.dryrun import parse_collectives
+    return parse_collectives(text)
+
+
+def test_parse_collectives_counts_operand_bytes():
+    hlo = """
+  %x = bf16[128,256]{1,0} parameter(0)
+  %ag = bf16[2048,256]{1,0} all-gather(bf16[128,256]{1,0} %x), dimensions={0}
+  %ar = f32[512]{0} all-reduce(f32[512]{0} %y), to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(f32[512]{0} %z), dimensions={0}
+  %cp = u8[1024]{0} collective-permute(u8[1024]{0} %w)
+  %no = f32[4]{0} add(f32[4]{0} %a, f32[4]{0} %b)
+"""
+    got = _parse(hlo)
+    assert got["all-gather"] == 128 * 256 * 2
+    assert got["all-reduce"] == 512 * 4
+    assert got["reduce-scatter"] == 512 * 4
+    assert got["collective-permute"] == 1024
+    assert got["all-to-all"] == 0
+    assert got["total"] == sum(got[k] for k in
+                               ("all-gather", "all-reduce", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+    assert got["n_all-gather"] == 1
+
+
+def test_named_shardings_demote_indivisible():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = AxisRules.make(mesh)
+    sds = {"w": jax.ShapeDtypeStruct((7, 8), jnp.float32)}
+    demo = []
+    sh = named_shardings_for(sds, {"w": ("fsdp", "tp")}, mesh, rules, demo)
+    assert sh["w"].spec == P(None, None) or sh["w"].spec == P("data", "model")
+
+
+def test_batch_logical():
+    sds = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32),
+           "frames": jax.ShapeDtypeStruct((8, 10, 4), jnp.float32)}
+    log = batch_logical(sds)
+    assert log["tokens"] == ("dp", None)
+    assert log["frames"] == ("dp", None, None)
+
+
+def test_supports_shape_rules():
+    from repro.configs import get_config
+    assert get_config("mamba2-1.3b").supports_shape("long_500k")[0]
+    assert get_config("zamba2-2.7b").supports_shape("long_500k")[0]
+    assert get_config("h2o-danube-1.8b").supports_shape("long_500k")[0]  # SWA
+    assert not get_config("deepseek-7b").supports_shape("long_500k")[0]
+    assert not get_config("chameleon-34b").supports_shape("long_500k")[0]
+
+
+def test_arch_param_counts_sane():
+    """Analytic parameter counts in the right ballpark for the full configs."""
+    from repro.configs import get_config
+    expect = {
+        "deepseek-7b": (6e9, 8.5e9),
+        "command-r-plus-104b": (90e9, 120e9),
+        "starcoder2-15b": (13e9, 18e9),
+        "mixtral-8x22b": (120e9, 150e9),
+        "mamba2-1.3b": (1.0e9, 1.6e9),
+        "h2o-danube-1.8b": (1.4e9, 2.2e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, (arch, n)

@@ -1,0 +1,69 @@
+"""Hash pipeline: jnp path vs numpy oracle; locality property."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hashing import (HashFamily, hash_points_radius,
+                                hash_points_radius_np, make_hash_family)
+
+
+def _family(r=2, L=4, m=6, d=16, w=4.0, u=12, fp_bits=12, seed=0):
+    return make_hash_family(jax.random.PRNGKey(seed), r=r, L=L, m=m, d=d,
+                            w=w, u=u, fp_bits=fp_bits)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 64), d=st.sampled_from([4, 16, 33]),
+       t=st.integers(0, 1))
+def test_jnp_matches_numpy_oracle(n, d, t):
+    fam = _family(d=d)
+    rng = np.random.default_rng(n)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    bk, fp = hash_points_radius(fam, jnp.asarray(x), t, radius=float(2 ** t))
+    fam_np = {"a": np.asarray(fam.a), "b": np.asarray(fam.b),
+              "rm": np.asarray(fam.rm), "w": fam.w}
+    bk2, fp2 = hash_points_radius_np(fam_np, x, t, float(2 ** t), fam.u, fam.fp_bits)
+    np.testing.assert_array_equal(np.asarray(bk), bk2)
+    np.testing.assert_array_equal(np.asarray(fp), fp2)
+
+
+def test_bucket_and_fp_ranges():
+    fam = _family(u=10, fp_bits=8)
+    x = np.random.default_rng(0).normal(size=(128, 16)).astype(np.float32)
+    bk, fp = hash_points_radius(fam, jnp.asarray(x), 0, 1.0)
+    assert int(jnp.max(bk)) < 2 ** 10 and int(jnp.min(bk)) >= 0
+    assert int(jnp.max(fp)) < 2 ** 8
+
+
+def test_locality_property():
+    """Near pairs must collide (same 32-bit compound hash -> same bucket+fp)
+    more often than far pairs — the defining LSH property."""
+    fam = _family(r=1, L=16, m=8, d=24, w=4.0)
+    rng = np.random.default_rng(1)
+    base = rng.normal(size=(256, 24)).astype(np.float32)
+    near = base + 0.05 * rng.normal(size=base.shape).astype(np.float32)
+    far = base + 4.0 * rng.normal(size=base.shape).astype(np.float32)
+    b0, f0 = hash_points_radius(fam, jnp.asarray(base), 0, 1.0)
+    bn, fn = hash_points_radius(fam, jnp.asarray(near), 0, 1.0)
+    bf, ff = hash_points_radius(fam, jnp.asarray(far), 0, 1.0)
+    near_rate = float(jnp.mean((b0 == bn) & (f0 == fn)))
+    far_rate = float(jnp.mean((b0 == bf) & (f0 == ff)))
+    assert near_rate > far_rate + 0.2
+    assert near_rate > 0.3
+
+
+def test_radius_scaling_widens_buckets():
+    """At a larger radius the effective width grows, so a fixed pair collides
+    at least as often (statistically)."""
+    fam = _family(r=3, L=24, m=6, d=16)
+    rng = np.random.default_rng(2)
+    a = rng.normal(size=(200, 16)).astype(np.float32)
+    b = a + 0.5 * rng.normal(size=a.shape).astype(np.float32)
+    rates = []
+    for t, radius in enumerate((1.0, 2.0, 4.0)):
+        ba, fa = hash_points_radius(fam, jnp.asarray(a), t, radius)
+        bb, fb = hash_points_radius(fam, jnp.asarray(b), t, radius)
+        rates.append(float(jnp.mean((ba == bb) & (fa == fb))))
+    assert rates[2] > rates[0]

@@ -1,0 +1,64 @@
+"""Index construction invariants (paper Fig. 9/10 layout)."""
+import numpy as np
+import pytest
+
+from repro.core import E2LSHoS
+from repro.core.index import build_index
+from repro.core.probabilities import solve_params
+
+
+def test_every_object_indexed_once_per_table(built_index):
+    idx = built_index.index
+    p = idx.params
+    n = p.n
+    # entries per (t, l) slice must be a permutation of 0..n-1
+    toff = np.asarray(idx.table_off)
+    tcnt = np.asarray(idx.table_cnt)
+    eid = np.asarray(idx.entries_id)
+    assert eid.shape[0] == n * p.L * p.r
+    # bucket sizes per (t, l) sum to n
+    assert (tcnt.reshape(p.r, p.L, -1).sum(axis=2) == n).all()
+    # spot-check one (t, l): gathered ids are exactly 0..n-1
+    for t, l in ((0, 0), (p.r - 1, p.L - 1)):
+        offs = toff[t, l]
+        cnts = tcnt[t, l]
+        ids = []
+        for o, c in zip(offs[offs >= 0], cnts[offs >= 0]):
+            ids.append(eid[o:o + c])
+        ids = np.sort(np.concatenate(ids))
+        np.testing.assert_array_equal(ids, np.arange(n))
+
+
+def test_offsets_within_bounds(built_index):
+    idx = built_index.index
+    toff = np.asarray(idx.table_off)
+    tcnt = np.asarray(idx.table_cnt)
+    E = np.asarray(idx.entries_id).shape[0]
+    valid = toff >= 0
+    assert ((toff[valid] + tcnt[valid]) <= E).all()
+    assert (tcnt[~valid] == 0).all()
+
+
+def test_storage_accounting(built_index):
+    st = built_index.index.stats
+    p = built_index.params
+    # block count >= entries / block_objs and >= nonempty buckets
+    assert st.storage_blocks >= st.entries / p.block_objs
+    assert st.storage_blocks >= st.nonempty_buckets
+    assert st.index_storage_bytes == st.storage_blocks * p.block_bytes + st.table_storage_bytes
+    fp = built_index.footprint()
+    assert fp.index_on_storage == st.index_storage_bytes
+    assert fp.dram_usage < st.index_storage_bytes  # the point of E2LSHoS
+
+
+def test_save_load_roundtrip(tmp_path, built_index):
+    from repro.core.index import E2LSHIndex
+
+    path = tmp_path / "idx.npz"
+    built_index.index.save(path)
+    loaded = E2LSHIndex.load(path)
+    np.testing.assert_array_equal(np.asarray(loaded.table_off),
+                                  np.asarray(built_index.index.table_off))
+    np.testing.assert_array_equal(np.asarray(loaded.entries_id),
+                                  np.asarray(built_index.index.entries_id))
+    assert loaded.params == built_index.params

@@ -1,0 +1,53 @@
+"""N_io accounting (Sec. 4.3) and block-size replay (Fig. 3)."""
+import numpy as np
+import pytest
+
+from repro.core.io_count import nio_for_block_size, nio_infinity, replay_probe_trace
+from repro.core.probabilities import block_objs_for
+
+
+def test_nio_infinity_counts_two_per_nonempty():
+    sizes = np.array([[[5, 0, -1, 12], [1, 1, 0, -1]]])  # [Q=1, r=2, L=4]
+    # non-empty probed buckets: {5, 12} + {1, 1} = 4 -> 2 I/Os each
+    assert nio_infinity(sizes)[0] == 2 * 4
+
+
+def test_replay_small_buckets_one_block_each():
+    tr, br = replay_probe_trace(np.array([3, 5, 99]), s_cap=1000, block_bytes=512)
+    assert tr == 3 and br == 3
+
+
+def test_replay_chained_blocks():
+    # 250 objects at 99/block -> 3 blocks
+    tr, br = replay_probe_trace(np.array([250]), s_cap=1000, block_bytes=512)
+    assert tr == 1 and br == 3
+
+
+def test_replay_s_cap_truncates_chains():
+    # budget hit after the first chunk round
+    tr, br = replay_probe_trace(np.array([500, 500]), s_cap=150, block_bytes=512)
+    assert tr == 2 and br == 2  # one 99-obj chunk each reaches 198 >= 150
+
+
+def test_smaller_blocks_more_ios():
+    sizes = np.array([[[120, 40, 300, -1]]])
+    big = nio_for_block_size(sizes, s_cap=1000, block_bytes=4096)[0]
+    small = nio_for_block_size(sizes, s_cap=1000, block_bytes=128)[0]
+    assert small > big
+
+
+def test_matches_runtime_walker(built_index, clustered_data):
+    """Replaying the probe trace at the native block size must reproduce the
+    walker's block-read count exactly (same round-robin + S semantics)."""
+    res = built_index.query(clustered_data["queries"], k=1,
+                            collect_probe_sizes=True)
+    p = built_index.params
+    sizes = np.asarray(res.probe_sizes)
+    replay = nio_for_block_size(sizes, s_cap=p.S, block_bytes=p.block_bytes)
+    np.testing.assert_array_equal(replay, np.asarray(res.nio))
+
+
+def test_block_objs_for():
+    assert block_objs_for(512) == 99
+    assert block_objs_for(128) == (128 - 16) // 5
+    assert block_objs_for(4096) == (4096 - 16) // 5

@@ -1,0 +1,81 @@
+"""Collision law p_w(s) and Eq.-5 parameterization."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.probabilities import (
+    collision_probability, radii_schedule, rho, solve_params,
+    success_probability, expected_far_collisions, block_objs_for,
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(s1=st.floats(0.05, 50.0), s2=st.floats(0.05, 50.0),
+       w=st.floats(0.5, 16.0))
+def test_collision_probability_monotone_decreasing(s1, s2, w):
+    lo, hi = min(s1, s2), max(s1, s2)
+    p_lo = float(collision_probability(lo, w))
+    p_hi = float(collision_probability(hi, w))
+    assert 0.0 <= p_hi <= p_lo <= 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(s=st.floats(0.1, 10.0), w1=st.floats(0.5, 8.0), w2=st.floats(0.5, 8.0))
+def test_collision_probability_monotone_in_w(s, w1, w2):
+    lo, hi = min(w1, w2), max(w1, w2)
+    assert collision_probability(s, hi) >= collision_probability(s, lo) - 1e-12
+
+
+def test_collision_probability_monte_carlo():
+    """p_w(s) formula vs direct simulation of h(o)=floor((a.o+b)/w)."""
+    rng = np.random.default_rng(0)
+    d, trials = 64, 40000
+    for s, w in ((1.0, 4.0), (2.0, 4.0), (3.0, 2.0)):
+        o1 = np.zeros((d,))
+        o2 = np.zeros((d,))
+        o2[0] = s  # distance s
+        a = rng.normal(size=(trials, d))
+        b = rng.uniform(0, w, size=trials)
+        h1 = np.floor((a @ o1 + b) / w)
+        h2 = np.floor((a @ o2 + b) / w)
+        emp = float(np.mean(h1 == h2))
+        pred = float(collision_probability(s, w))
+        assert abs(emp - pred) < 0.02, (s, w, emp, pred)
+
+
+def test_eq5_parameters():
+    p = solve_params(100000, 32, c=2.0, w=4.0, gamma=1.0, max_L=10**9, max_m=10**9)
+    # m = log_{1/p2} n
+    assert p.m == math.ceil(math.log(100000) / math.log(1.0 / p.p2))
+    # L = n^rho
+    assert p.L == math.ceil(100000 ** p.rho)
+    assert p.S == 2 * p.L
+    assert 0 < p.rho < 1
+    assert p.p1 > p.p2
+
+
+def test_gamma_scaling_keeps_L():
+    a = solve_params(50000, 16, gamma=1.0)
+    b = solve_params(50000, 16, gamma=0.5)
+    assert a.L == b.L           # Sec 3.3: gamma does not change the index size
+    assert b.m < a.m
+
+
+def test_radii_schedule():
+    radii = radii_schedule(x_max=1.0, d=64, c=2.0)
+    # R_max = 2 * sqrt(64) = 16 -> r = 4 -> radii (1, 2, 4, 8)
+    assert radii == (1.0, 2.0, 4.0, 8.0)
+    assert len(radii_schedule(10.0, 128, 2.0)) == math.ceil(math.log2(20 * math.sqrt(128)))
+
+
+def test_block_capacity_matches_paper():
+    # Sec 5.1: (512 - 16) / 5 = 99 object infos per block
+    assert block_objs_for(512) == 99
+
+
+def test_success_and_far_collision_bounds():
+    p = solve_params(10000, 16)
+    assert 0 < success_probability(p.m, p.L, p.p1) <= 1
+    assert expected_far_collisions(10000, p.m, p.L, p.p2) >= 0

@@ -1,0 +1,60 @@
+"""Serving engine + retrieval hook + tuning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import E2LSHoS
+from repro.core.tuning import overall_ratio, tune_gamma
+from repro.models import Model
+from repro.serving import ServeEngine
+
+
+def test_generate_shapes_and_determinism():
+    cfg = get_config("mamba2-1.3b", reduced=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab, (2, 16)), jnp.int32)}
+    eng = ServeEngine(model, params, max_seq=64, cache_dtype=jnp.float32)
+    out1 = eng.generate(batch, steps=6)
+    out2 = eng.generate(batch, steps=6)
+    assert out1.tokens.shape == (2, 6)
+    np.testing.assert_array_equal(np.asarray(out1.tokens), np.asarray(out2.tokens))
+
+
+def test_retrieval_hook_runs():
+    cfg = get_config("h2o-danube-1.8b", reduced=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(2)
+    dstore = rng.normal(size=(2000, cfg.vocab)).astype(np.float32)
+    idx = E2LSHoS.build(dstore / np.abs(dstore).max(), gamma=0.8, max_L=8)
+
+    def retr(hidden):
+        h = np.array(hidden, np.float32)
+        h /= np.maximum(np.abs(h).max(), 1e-9)
+        res = idx.query(jnp.asarray(h), k=2)
+        return res.ids, res.dists
+
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 8)), jnp.int32)}
+    eng = ServeEngine(model, params, max_seq=32, cache_dtype=jnp.float32,
+                      retrieval_fn=retr)
+    out = eng.generate(batch, steps=3)
+    assert out.neighbors.shape == (2, 3, 2)
+
+
+def test_overall_ratio_math():
+    d = np.array([[1.0, 2.0], [3.0, 3.0]])
+    g = np.array([[1.0, 1.0], [3.0, 2.0]])
+    # mean over queries of mean_i d/g: q0: (1+2)/2=1.5; q1: (1+1.5)/2=1.25
+    assert overall_ratio(d, g) == pytest.approx((1.5 + 1.25) / 2)
+    assert overall_ratio(np.array([[np.inf]]), np.array([[1.0]])) >= 10.0
+
+
+def test_tune_gamma_hits_target(clustered_data):
+    res = tune_gamma(clustered_data["db"], clustered_data["queries"],
+                     clustered_data["gt_dists"][:, :1], target_ratio=1.05,
+                     gammas=(0.7,), s_scales=(2.0,), max_L=24, seed=3)
+    assert res.ratio < 1.05

@@ -1,0 +1,92 @@
+"""Storage cost model (Eqs. 6-16) and device tables."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.storage import (
+    DEVICES, INTERFACES, TABLE5_CONFIGS, StorageConfig,
+    inmem_request_rate_requirement, mmap_sync_model, required_iops_async,
+    required_iops_sync, required_request_rate_async, t_async, t_sync,
+)
+
+
+def test_paper_table2_values():
+    assert DEVICES["cssd"].iops_qd128 == 273e3
+    assert DEVICES["essd"].iops_qd128 == 1400e3
+    assert DEVICES["xlfdd"].iops_qd128 == 3860e3
+    assert INTERFACES["io_uring"].t_request == 1.0e-6
+    assert INTERFACES["spdk"].t_request == 350e-9
+    assert INTERFACES["xlfdd"].t_request == 50e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(tc=st.floats(1e-6, 1e-2), nio=st.integers(1, 5000),
+       dev=st.sampled_from(["cssd", "essd", "xlfdd"]),
+       iface=st.sampled_from(["io_uring", "spdk", "xlfdd"]))
+def test_async_never_slower_than_sync(tc, nio, dev, iface):
+    cfg = StorageConfig(DEVICES[dev], 1, INTERFACES[iface])
+    assert t_async(tc, nio, cfg) <= t_sync(tc, nio, cfg) + 1e-12
+
+
+def test_eq6_eq7_shapes():
+    cfg = StorageConfig(DEVICES["cssd"], 1, INTERFACES["io_uring"])
+    tc, nio = 100e-6, 348  # SIFT-like
+    ts = t_sync(tc, nio, cfg)
+    ta = t_async(tc, nio, cfg)
+    # sync: dominated by per-IO latency at QD1 (7.2 kIOPS -> 139 us each)
+    assert ts > nio / DEVICES["cssd"].iops_qd1
+    # async: max(cpu lane, storage lane)
+    assert ta == pytest.approx(max(tc + nio * 1e-6, nio / 273e3))
+
+
+def test_requirements_inverse_relationship():
+    # Eq. 11: halving the target doubles the IOPS requirement
+    assert required_iops_async(1e-3, 300) * 2 == pytest.approx(
+        required_iops_async(0.5e-3, 300))
+    # Eq. 9 diverges as the target approaches T_compute
+    assert required_iops_sync(1e-4, 1e-4, 100) == math.inf
+    # Eq. 16: in-memory-speed CPU overhead requirement carries the 10x factor
+    assert inmem_request_rate_requirement(1e-3, 300) == pytest.approx(
+        10 * 300 / 1e-3)
+
+
+def test_observation3_cssd_beats_srs_requirement():
+    """Sec 4.4: a few hundred kIOPS suffices for SRS speeds; one cSSD at
+    QD128 provides 273 kIOPS -> async E2LSHoS on cSSD meets typical targets."""
+    t_srs = 2e-3          # measured-scale SRS query time
+    nio = 350             # SIFT-scale N_io
+    req = required_iops_async(t_srs, nio)
+    assert req < DEVICES["cssd"].iops_qd128
+    # while sync on the same device fails by a wide margin
+    assert required_iops_sync(t_srs, 100e-6, nio) > DEVICES["cssd"].iops_qd1
+
+
+def test_observation4_inmem_needs_light_interface():
+    """Sec 4.5: in-memory speeds need MIOPS + tens-of-ns T_request."""
+    t_e2lsh = 150e-6
+    nio = 350
+    iops_req = required_iops_async(t_e2lsh, nio)     # ~2.3 MIOPS
+    assert DEVICES["cssd"].iops_qd128 < iops_req < DEVICES["xlfdd"].iops_qd128 * 12
+    rate_req = inmem_request_rate_requirement(t_e2lsh, nio)
+    # "a few tens of nanoseconds" — the XLFDD interface's range (50 ns),
+    # orders of magnitude below io_uring's 1 us
+    assert 20e-9 < 1.0 / rate_req < 100e-9
+    assert 1.0 / rate_req < INTERFACES["io_uring"].t_request / 5
+
+
+def test_mmap_model_much_slower():
+    """Sec 6.5: the page-cache synchronous path is ~20x slower than async."""
+    cfg4 = StorageConfig(DEVICES["cssd"], 4, INTERFACES["io_uring"])
+    tc, nio = 150e-6, 800
+    slow = mmap_sync_model(tc, nio, cfg4)
+    fast = t_async(tc, nio, cfg4)
+    assert slow / fast > 10
+
+
+def test_table5_capacity_for_bigann():
+    """Configs meant for BIGANN(1B) must hold a ~6.1 TB index (Table 6)."""
+    for cfg in TABLE5_CONFIGS:
+        if cfg.count >= 4 or cfg.device is DEVICES["essd"] and cfg.count == 8:
+            if cfg.total_capacity_tb >= 6.1:
+                assert cfg.total_iops > 1e6
