@@ -1,0 +1,17 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: verify test bench-query deps
+
+deps:
+	$(PY) -m pip install -r requirements.txt
+
+# tier-1 gate (same command CI runs)
+verify:
+	$(PY) -m pytest -x -q
+
+test:
+	$(PY) -m pytest -q
+
+bench-query:
+	$(PY) benchmarks/bench_query_engine.py

@@ -8,7 +8,9 @@ from .probabilities import (
 )
 from .hashing import HashFamily, make_hash_family, hash_points_radius
 from .index import E2LSHIndex, IndexStats, build_index
-from .query import QueryConfig, QueryResult, query_batch, query_batch_adaptive
+from .query import (QueryConfig, QueryResult, ensure_fused_arrays, make_query_fn,
+                    query_batch, query_batch_adaptive, query_batch_adaptive_host,
+                    query_batch_fused)
 from .e2lshos import E2LSHoS, measured_query
 from .tuning import overall_ratio, tune_gamma
 from . import io_count, storage
@@ -17,7 +19,9 @@ __all__ = [
     "LSHParams", "collision_probability", "radii_schedule", "rho", "solve_params",
     "HashFamily", "make_hash_family", "hash_points_radius",
     "E2LSHIndex", "IndexStats", "build_index",
-    "QueryConfig", "QueryResult", "query_batch", "query_batch_adaptive",
+    "QueryConfig", "QueryResult", "query_batch", "query_batch_fused",
+    "query_batch_adaptive", "query_batch_adaptive_host", "ensure_fused_arrays",
+    "make_query_fn",
     "E2LSHoS", "measured_query", "overall_ratio", "tune_gamma",
     "io_count", "storage",
 ]

@@ -1,0 +1,24 @@
+"""Version-compat shims for the baked-in JAX toolchain.
+
+The container pins one jax version; these shims keep the source tree working
+across the API moves we know about so the same code lowers on newer TPU
+toolchains without edits.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+try:  # jax >= 0.6: top-level export, `check_vma` kwarg
+    _shard_map_impl = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:  # jax 0.4.x: experimental module, `check_rep` kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """`jax.shard_map` with replication checking off, on any supported jax."""
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                           **{_CHECK_KW: False})

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .compat import shard_map
 from .hashing import make_hash_family
 from .index import build_index
 from .probabilities import LSHParams, solve_params
@@ -168,9 +169,7 @@ def sharded_query(
         sh *= mesh.shape[ax]
     assert sh == sharded.num_shards, (sh, sharded.num_shards)
     s_cap = s_cap_per_shard or max(4 * k, -(-p.S // sharded.num_shards))
-    cfg = QueryConfig.from_params(p, k=k)
-    cfg = dataclasses.replace(cfg, S=int(s_cap), sbuf=0)
-    cfg.__post_init__()
+    cfg = QueryConfig.from_params(p, k=k).replace(s_cap=int(s_cap))
 
     index_axes = tuple(index_axes)
     query_axes = tuple(query_axes)
@@ -193,8 +192,7 @@ def sharded_query(
                  for k_, v in arrays.items()}
         return _local_shard_query(local, shard_off[0], qs, cfg, index_axes, k)
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                       check_vma=False)
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     return fn(sharded.arrays, sharded.shard_offsets, queries.astype(jnp.float32))
 
 

@@ -24,7 +24,8 @@ import numpy as np
 
 from .index import E2LSHIndex, build_index
 from .probabilities import LSHParams, solve_params
-from .query import QueryConfig, QueryResult, query_batch, query_batch_adaptive
+from .query import (QueryConfig, QueryResult, ensure_fused_arrays, query_batch,
+                    query_batch_adaptive_host, query_batch_fused)
 from . import storage as storage_mod
 
 __all__ = ["E2LSHoS", "MemoryFootprint", "measured_query"]
@@ -98,6 +99,13 @@ class E2LSHoS:
             self._arrays = arr
         return self._arrays
 
+    def fused_arrays(self, block_objs: Optional[int] = None) -> dict:
+        """Arrays + the blockified block-store layout the fused engine reads.
+        ensure_fused_arrays memoizes per block size on the arrays dict itself,
+        so the timing knob re-blockifies once."""
+        bo = int(block_objs or self.params.block_objs)
+        return ensure_fused_arrays(self.arrays(), bo)
+
     # -- querying ----------------------------------------------------------
     def query_config(self, *, k: int = 1, collect_probe_sizes: bool = False,
                      s_cap: Optional[int] = None, max_chain: int = 0,
@@ -106,30 +114,39 @@ class E2LSHoS:
             self.params, k=k, max_chain=max_chain,
             collect_probe_sizes=collect_probe_sizes,
         )
-        if s_cap is not None:
-            cfg = dataclasses.replace(cfg, S=int(s_cap), sbuf=0)
-            cfg.__post_init__()
-        if block_objs is not None and block_objs != cfg.block_objs:
-            # narrower gather chunks (timing knob): identical candidates and
-            # results; storage-block I/O accounting is replayed separately at
-            # the paper's 512 B granularity (io_count)
-            cfg = dataclasses.replace(
-                cfg, block_objs=int(block_objs),
-                max_chain=max(1, -(-cfg.S // int(block_objs)) + 1))
-        return cfg
+        # narrower gather chunks (timing knob): identical candidates and
+        # results; storage-block I/O accounting is replayed separately at
+        # the paper's 512 B granularity (io_count)
+        return cfg.replace(s_cap=s_cap, block_objs=block_objs)
 
     def query(self, queries, *, k: int = 1, adaptive: bool = True,
+              engine: Optional[str] = None,
               collect_probe_sizes: bool = False, s_cap: Optional[int] = None,
               block_objs: Optional[int] = None) -> QueryResult:
+        """Run a query batch.
+
+        engine: "fused" (single-dispatch while_loop engine), "oracle"
+        (unrolled reference), or "host" (pre-fusion per-radius host loop, kept
+        for benchmarking). Default: fused when `adaptive` else oracle.
+        """
         cfg = self.query_config(k=k, collect_probe_sizes=collect_probe_sizes,
                                 s_cap=s_cap, block_objs=block_objs)
-        fn = query_batch_adaptive if adaptive else query_batch
-        return fn(self.arrays(), jnp.asarray(queries), cfg)
+        if engine is None:
+            engine = "fused" if adaptive else "oracle"
+        queries = jnp.asarray(queries)
+        if engine == "fused":
+            return query_batch_fused(self.fused_arrays(cfg.block_objs),
+                                     queries, cfg)
+        if engine == "host":
+            return query_batch_adaptive_host(self.arrays(), queries, cfg)
+        if engine != "oracle":
+            raise ValueError(f"unknown engine {engine!r}; "
+                             "expected 'fused', 'oracle', or 'host'")
+        return query_batch(self.arrays(), queries, cfg)
 
     # -- accounting (Table 6) ----------------------------------------------
     def footprint(self) -> MemoryFootprint:
         st = self.index.stats
-        entry_bytes = st.entries * 5  # 5 B object infos (Sec. 5.1)
         if self.tier == "storage":
             dram_index = st.dram_index_bytes
             dram = st.db_bytes + dram_index
@@ -138,7 +155,6 @@ class E2LSHoS:
             dram_index = st.index_storage_bytes
             dram = st.db_bytes + dram_index
             on_storage = 0
-        del entry_bytes
         return MemoryFootprint(
             index_on_storage=on_storage,
             dram_usage=dram,
@@ -157,14 +173,17 @@ class E2LSHoS:
 
 def measured_query(idx: E2LSHoS, queries, *, k: int = 1, repeats: int = 3,
                    collect_probe_sizes: bool = False,
-                   block_objs: Optional[int] = None) -> MeasuredQuery:
+                   block_objs: Optional[int] = None,
+                   engine: Optional[str] = None) -> MeasuredQuery:
     """Run the adaptive query and measure wall time per query on this host.
 
-    The first call includes compile; we time subsequent repeats.
+    The first call includes compile; we time subsequent repeats. `engine`
+    selects the dispatch path (None -> fused; "host" re-measures the
+    pre-fusion per-radius loop for comparison).
     """
     queries = jnp.asarray(queries)
     kw = dict(k=k, collect_probe_sizes=collect_probe_sizes,
-              block_objs=block_objs)
+              block_objs=block_objs, engine=engine)
     res = idx.query(queries, **kw)
     jax.block_until_ready(res.ids)
     t0 = time.perf_counter()

@@ -9,10 +9,27 @@ For each radius R in (1, c, c^2, ...):
      merge into the running top-k (dedup by id), and mark the query done when
      k results lie within c*R (top-k c-ANNS per Sec. 2.1).
 
+Two executable engines produce identical results:
+
+* ``query_batch`` — the reference ORACLE: all radii unrolled at trace time
+  with done-masking, per-radius einsum hashing and a dense gather chain walk.
+  Simple, obviously correct, and the parity target for everything else.
+* ``query_batch_fused`` — the production engine: the whole radius schedule's
+  query hashes are precomputed in ONE kernel dispatch
+  (kernels.lsh_hash_all_radii: a single MXU matmul over r*L*m projection
+  columns), the chain walk reads the blockified block store through
+  kernels.bucket_probe (scalar-prefetch gather + fingerprint filter on TPU),
+  the distance epilogue runs through kernels.l2_distance_gathered, and the
+  radius loop is a ``jax.lax.while_loop`` INSIDE the jitted computation — so
+  early exit costs zero device->host syncs. One dispatch per query batch.
+
+``query_batch_adaptive`` (the public adaptive entry point) routes to the
+fused engine; the pre-fusion host-driven loop survives as
+``query_batch_adaptive_host`` for benchmarking the dispatch overhead it paid
+(one jitted call + one device->host sync per radius).
+
 All shapes are fixed (TPU requirement): the candidate buffer holds SBUF >= S
-slots, chains are walked for a static `max_chain` steps with masking, and
-early exit is a `done` mask (a host-driven adaptive loop is provided for CPU
-benchmarking where real early exit saves wall time).
+slots, chains are walked for a static `max_chain` steps with masking.
 
 I/O accounting (paper Sec. 4.3): one I/O per *non-empty* probed bucket for the
 hash-table read (empty buckets are skipped via the DRAM-resident bitmap, as
@@ -34,8 +51,17 @@ import numpy as np
 
 from .hashing import fmix32
 from .probabilities import LSHParams
+from ..kernels.bucket_probe.ops import blockify_entries
+from ..kernels.bucket_probe.ops import bucket_probe
+from ..kernels.dispatch import on_tpu
+from ..kernels.l2_distance.ops import l2_distance_gathered
+from ..kernels.lsh_hash.ops import lsh_hash_all_radii
 
-__all__ = ["QueryConfig", "QueryResult", "query_batch", "query_batch_adaptive", "make_query_fn"]
+__all__ = [
+    "QueryConfig", "QueryResult", "query_batch", "query_batch_fused",
+    "query_batch_adaptive", "query_batch_adaptive_host", "ensure_fused_arrays",
+    "make_query_fn",
+]
 
 _INVALID = np.int32(2**31 - 1)
 
@@ -61,6 +87,22 @@ class QueryConfig:
     def __post_init__(self):
         if self.sbuf == 0:
             object.__setattr__(self, "sbuf", max(128, -(-self.S // 128) * 128))
+
+    def replace(self, *, s_cap: Optional[int] = None,
+                block_objs: Optional[int] = None, **changes) -> "QueryConfig":
+        """Constructor path for derived plans (frozen dataclass — never mutate).
+
+        `s_cap` re-derives the candidate buffer width; `block_objs` re-derives
+        the chain depth so the narrower chunks still cover S candidates.
+        Any other field goes through **changes verbatim.
+        """
+        if s_cap is not None:
+            changes.update(S=int(s_cap), sbuf=0)
+        if block_objs is not None and block_objs != self.block_objs:
+            S = int(changes.get("S", self.S))
+            changes.update(block_objs=int(block_objs),
+                           max_chain=max(1, -(-S // int(block_objs)) + 1))
+        return dataclasses.replace(self, **changes)
 
     @staticmethod
     def from_params(p: LSHParams, *, k: int = 1, max_chain: int = 0,
@@ -105,8 +147,20 @@ def _hash_queries(q, a_t, b_t, rm_t, wr, u, fp_bits):
     return bucket, fp
 
 
+def _append_candidates(buf_id, count, flat_id, flat_ok, S, SBUF):
+    """Compact-append fingerprint matches into the candidate buffer (trunc at S)."""
+    Q = buf_id.shape[0]
+    rows = jnp.arange(Q, dtype=jnp.int32)[:, None]
+    pos = count[:, None] + jnp.cumsum(flat_ok, axis=1) - flat_ok
+    keep = flat_ok & (pos < S)
+    pos_w = jnp.where(keep, pos, SBUF)  # out-of-range -> dropped
+    buf_id = buf_id.at[rows, pos_w].set(flat_id, mode="drop")
+    count = jnp.minimum(count + jnp.sum(flat_ok, axis=1, dtype=jnp.int32), S)
+    return buf_id, count
+
+
 def _probe_radius(arrays, queries, qnorm2, t, radius, cfg: QueryConfig, active_q):
-    """One (R, c)-NN probe for every query in the batch.
+    """One (R, c)-NN probe for every query in the batch (ORACLE path).
 
     Returns (cand_id [Q, SBUF], cand_d2 [Q, SBUF], stats dict).
     `active_q` masks queries already done (their I/O is not counted and their
@@ -132,7 +186,6 @@ def _probe_radius(arrays, queries, qnorm2, t, radius, cfg: QueryConfig, active_q
     count = jnp.zeros((Q,), dtype=jnp.int32)
     blocks_read = jnp.zeros((Q,), dtype=jnp.int32)
     slots = jnp.arange(BLK, dtype=jnp.int32)
-    rows = jnp.arange(Q, dtype=jnp.int32)[:, None]
     entries_id = arrays["entries_id"]
     entries_fp = arrays["entries_fp"]
 
@@ -150,14 +203,9 @@ def _probe_radius(arrays, queries, qnorm2, t, radius, cfg: QueryConfig, active_q
         eid = jnp.take(entries_id, idx_safe, axis=0)
         efp = jnp.take(entries_fp, idx_safe, axis=0).astype(jnp.uint32)
         ok = ok_read & (efp == qfp[:, :, None])                   # fingerprint filter
-        flat_ok = ok.reshape(Q, L * BLK)
-        flat_id = eid.reshape(Q, L * BLK)
-        # compact-append into the candidate buffer, truncating at S
-        pos = count[:, None] + jnp.cumsum(flat_ok, axis=1) - flat_ok
-        keep = flat_ok & (pos < S)
-        pos_w = jnp.where(keep, pos, SBUF)  # out-of-range -> dropped
-        buf_id = buf_id.at[rows, pos_w].set(flat_id, mode="drop")
-        count = jnp.minimum(count + jnp.sum(flat_ok, axis=1, dtype=jnp.int32), S)
+        buf_id, count = _append_candidates(
+            buf_id, count, eid.reshape(Q, L * BLK), ok.reshape(Q, L * BLK),
+            S, SBUF)
 
     # distance check (Step 3) against the DRAM-tier coordinates
     valid = buf_id != _INVALID
@@ -166,6 +214,80 @@ def _probe_radius(arrays, queries, qnorm2, t, radius, cfg: QueryConfig, active_q
     dot = jnp.einsum("qsd,qd->qs", coords, queries, preferred_element_type=jnp.float32)
     xn2 = jnp.take(arrays["db_norm2"], safe_id, axis=0)
     d2 = xn2 - 2.0 * dot + qnorm2[:, None]
+    d2 = jnp.where(valid, jnp.maximum(d2, 0.0), jnp.inf)
+
+    stats = dict(
+        nio_table=jnp.sum(nonempty, axis=1, dtype=jnp.int32),
+        nio_blocks=blocks_read,
+        cands=count,
+    )
+    if cfg.collect_probe_sizes:
+        stats["probe_sizes"] = jnp.where(nonempty, cnt, -1)
+    return buf_id, d2, stats
+
+
+def _probe_radius_fused(arrays, queries, qnorm2, cnt, head, qfp,
+                        cfg: QueryConfig, active_q):
+    """One (R, c)-NN probe on the blockified store (FUSED path).
+
+    `cnt`/`head`/`qfp` [Q, L] arrive precomputed (all radii hashed AND looked
+    up in one batched pass before the radius loop). Step 2 reads ALL chain
+    steps' block rows
+    through ONE bucket_probe dispatch (scalar-prefetch gather + fingerprint
+    filter on TPU — one call per radius maximizes the DMA queue depth the
+    paper's async reads rely on; jnp gather oracle elsewhere), then folds the
+    oracle's sequential `count < S` read-gating back in with a scalar scan
+    over chain depth. Step 3 runs the l2_distance_gathered epilogue.
+    Candidate contents, order, and I/O counts are identical to `_probe_radius`
+    (the blockified rows hold exactly the CSR chunk entries, flattened in the
+    oracle's (step, l, slot) round-robin order).
+    """
+    Q = queries.shape[0]
+    L, BLK, S, C = cfg.L, cfg.block_objs, cfg.S, cfg.max_chain
+    SBUF = _fused_sbuf(cfg)
+    ids_blocks = arrays["ids_blocks"]
+    fps_blocks = arrays["fps_blocks"]
+    BLKp = ids_blocks.shape[1]
+    nonempty = (cnt > 0) & active_q[:, None]
+
+    # one gather for the whole chain walk: chunk c of bucket (q, l) is row
+    # `head + c` (contiguous rows); chunks past the chain end (and masked
+    # queries) read spare row 0, which holds no entries
+    steps = jnp.arange(C, dtype=jnp.int32)
+    readable = nonempty[:, None, :] & (cnt[:, None, :] > steps[None, :, None] * BLK)
+    rows = jnp.where(readable, head[:, None, :] + steps[None, :, None], 0)
+    qfp_rep = jnp.broadcast_to(qfp.astype(jnp.int32)[:, None, :], (Q, C, L))
+    filt = bucket_probe(rows.reshape(-1), qfp_rep.reshape(-1),
+                        ids_blocks, fps_blocks)          # [Q*C*L, BLKp]
+    match = filt.reshape(Q, C, L * BLKp)
+
+    # replay the oracle's per-step S-budget gate: chunks at depth c are read
+    # iff the candidate count entering step c is below S (count only grows,
+    # so this is a C-step scalar scan; matches in unread chunks don't count)
+    m_all = jnp.sum(match != _INVALID, axis=2, dtype=jnp.int32)   # [Q, C]
+    count = jnp.zeros((Q,), dtype=jnp.int32)
+    gates = []
+    for c in range(C):
+        gate = count < S
+        gates.append(gate)
+        count = jnp.minimum(count + jnp.where(gate, m_all[:, c], 0), S)
+    step_active = jnp.stack(gates, axis=1)                        # [Q, C]
+    blocks_read = jnp.sum(readable & step_active[:, :, None], axis=(1, 2),
+                          dtype=jnp.int32)
+
+    buf_id = jnp.full((Q, SBUF), _INVALID, dtype=jnp.int32)
+    flat_ok = (match != _INVALID) & step_active[:, :, None]
+    buf_id, count = _append_candidates(
+        buf_id, jnp.zeros((Q,), dtype=jnp.int32),
+        match.reshape(Q, C * L * BLKp), flat_ok.reshape(Q, C * L * BLKp),
+        S, SBUF)
+
+    # distance check (Step 3) against the DRAM-tier coordinates
+    valid = buf_id != _INVALID
+    safe_id = jnp.where(valid, buf_id, 0)
+    coords = jnp.take(arrays["db"], safe_id, axis=0)              # [Q, SBUF, d]
+    xn2 = jnp.take(arrays["db_norm2"], safe_id, axis=0)
+    d2 = l2_distance_gathered(queries, coords, xn2, qnorm2)
     d2 = jnp.where(valid, jnp.maximum(d2, 0.0), jnp.inf)
 
     stats = dict(
@@ -196,17 +318,16 @@ def _merge_topk(best_id, best_d2, new_id, new_d2, k):
     return out_id, out_d2
 
 
-def _radius_step(arrays, queries, qnorm2, state, t, radius, cfg: QueryConfig):
+def _update_state(state, cid, cd2, st, t, radius_thresh2, cfg: QueryConfig):
+    """Fold one radius' probe results into the running state (done-masked)."""
     (best_id, best_d2, done, radii_searched, nio_t, nio_b, cands, probe_sizes) = state
     active_q = ~done
-    cid, cd2, st = _probe_radius(arrays, queries, qnorm2, t, radius, cfg, active_q)
     new_id, new_d2 = _merge_topk(best_id, best_d2, cid, cd2, cfg.k)
     # freeze results of queries that were already done (paper reports at the
     # first successful radius)
     best_id = jnp.where(done[:, None], best_id, new_id)
     best_d2 = jnp.where(done[:, None], best_d2, new_d2)
-    thresh = jnp.float32((cfg.c * radius) ** 2)
-    within = jnp.sum((best_d2 <= thresh), axis=1) >= cfg.k
+    within = jnp.sum((best_d2 <= radius_thresh2), axis=1) >= cfg.k
     newly_done = within & active_q
     radii_searched = radii_searched + active_q.astype(jnp.int32)
     nio_t = nio_t + st["nio_table"]
@@ -218,6 +339,13 @@ def _radius_step(arrays, queries, qnorm2, state, t, radius, cfg: QueryConfig):
         )
     done = done | newly_done
     return (best_id, best_d2, done, radii_searched, nio_t, nio_b, cands, probe_sizes)
+
+
+def _radius_step(arrays, queries, qnorm2, state, t, radius, cfg: QueryConfig):
+    active_q = ~state[2]
+    cid, cd2, st = _probe_radius(arrays, queries, qnorm2, t, radius, cfg, active_q)
+    thresh = jnp.float32((cfg.c * radius) ** 2)
+    return _update_state(state, cid, cd2, st, t, thresh, cfg)
 
 
 def _init_state(Q, cfg: QueryConfig):
@@ -262,15 +390,127 @@ def _prep(arrays, queries):
     return arrays, queries, qnorm2
 
 
+def _public_arrays(arrays: dict) -> dict:
+    """Strip host-side bookkeeping (the blockify cache) before jit boundaries
+    so cache mutations never change a jitted function's signature."""
+    return {k: v for k, v in arrays.items() if not k.startswith("_")}
+
+
 @partial(jax.jit, static_argnames=("cfg",))
-def query_batch(arrays: dict, queries: jnp.ndarray, cfg: QueryConfig) -> QueryResult:
-    """Full fixed-shape query (all radii unrolled with done-masking). jit-able
-    and shard_map-able; this is what the TPU serving path lowers."""
+def _query_batch_jit(arrays: dict, queries: jnp.ndarray,
+                     cfg: QueryConfig) -> QueryResult:
     arrays, queries, qnorm2 = _prep(arrays, queries)
     state = _init_state(queries.shape[0], cfg)
     for t, radius in enumerate(cfg.radii):
         state = _radius_step(arrays, queries, qnorm2, state, t, float(radius), cfg)
     return _result_from_state(state, cfg)
+
+
+def query_batch(arrays: dict, queries: jnp.ndarray, cfg: QueryConfig) -> QueryResult:
+    """Reference ORACLE: all radii unrolled with done-masking. jit-able and
+    shard_map-able; the fused engine must match it bit-for-bit."""
+    return _query_batch_jit(_public_arrays(arrays), jnp.asarray(queries), cfg)
+
+
+def _fused_sbuf(cfg: QueryConfig) -> int:
+    """Internal candidate-buffer width for the fused probe.
+
+    cfg.sbuf carries the TPU 128-lane alignment; off-TPU the padding slots
+    are pure dead work (they are always INVALID), so the fused engine tightens
+    the buffer to S rounded to the SIMD-friendly 8. Results are identical for
+    any width >= S — padding slots never hold candidates.
+    """
+    return cfg.sbuf if on_tpu() else max(8, -(-cfg.S // 8) * 8)
+
+
+def ensure_fused_arrays(arrays: dict, block_objs: int) -> dict:
+    """Add the blockified block-store layout the fused engine consumes.
+
+    Host-side and memoized: the augmented dict is cached on `arrays` itself
+    (under a private key), so repeated functional-API calls with the same
+    arrays dict blockify once per block size instead of per query batch.
+    Production builds would emit this layout directly at index-build time;
+    keeping the converter here preserves one build path in core while every
+    engine shares the CSR source of truth. Block rows are padded to the TPU
+    lane width only when a TPU will read them; the jnp gather path gets
+    tight rows.
+    """
+    if arrays.get("_blockified_objs") == block_objs:
+        return arrays
+    cache = arrays.setdefault("_fused_cache", {})
+    if block_objs not in cache:
+        ids_b, fps_b, head, _ = blockify_entries(
+            np.asarray(arrays["entries_id"]), np.asarray(arrays["entries_fp"]),
+            np.asarray(arrays["table_off"]), np.asarray(arrays["table_cnt"]),
+            block_objs, lane_pad=128 if on_tpu() else 8,
+        )
+        out = {k: v for k, v in arrays.items() if k != "_fused_cache"}
+        out["ids_blocks"] = ids_b
+        out["fps_blocks"] = fps_b
+        out["blocks_head"] = head
+        out["_blockified_objs"] = block_objs
+        cache[block_objs] = out
+    return cache[block_objs]
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _query_batch_fused_jit(arrays: dict, queries: jnp.ndarray,
+                           cfg: QueryConfig) -> QueryResult:
+    arrays, queries, qnorm2 = _prep(arrays, queries)
+    Q = queries.shape[0]
+    r = len(cfg.radii)
+    # Step 1 for the WHOLE schedule: one kernel dispatch hashes every radius
+    # (the per-radius a/b/rm tensors are stacked [r, ...] already)
+    bucket_all, qfp_all = lsh_hash_all_radii(
+        queries, arrays["a"], arrays["b"], arrays["rm"],
+        w=cfg.w, radii=cfg.radii, u=cfg.u, fp_bits=cfg.fp_bits,
+    )
+    # ... and the hash-table lookups for the whole schedule too: bucket sizes
+    # and chain-head rows for every (t, q, l) in two batched gathers, so the
+    # radius loop only slices [Q, L] views
+    tl = (jnp.arange(r, dtype=jnp.int32)[:, None, None] * cfg.L
+          + jnp.arange(cfg.L, dtype=jnp.int32)[None, None, :])
+    flat_all = tl * (1 << cfg.u) + bucket_all                  # [r, Q, L]
+    cnt_all = jnp.take(arrays["table_cnt"].reshape(-1), flat_all, axis=0)
+    head_all = jnp.take(arrays["blocks_head"].reshape(-1), flat_all, axis=0)
+    thresh2 = jnp.asarray([(cfg.c * float(rad)) ** 2 for rad in cfg.radii],
+                          jnp.float32)
+    state0 = _init_state(Q, cfg)
+
+    def cond(carry):
+        t, state = carry
+        return (t < r) & ~jnp.all(state[2])
+
+    def body(carry):
+        t, state = carry
+        cnt = jax.lax.dynamic_index_in_dim(cnt_all, t, 0, keepdims=False)
+        head = jax.lax.dynamic_index_in_dim(head_all, t, 0, keepdims=False)
+        qfp = jax.lax.dynamic_index_in_dim(qfp_all, t, 0, keepdims=False)
+        active_q = ~state[2]
+        cid, cd2, st = _probe_radius_fused(
+            arrays, queries, qnorm2, cnt, head, qfp, cfg, active_q)
+        state = _update_state(state, cid, cd2, st, t, thresh2[t], cfg)
+        return t + 1, state
+
+    _, state = jax.lax.while_loop(cond, body, (jnp.int32(0), state0))
+    return _result_from_state(state, cfg)
+
+
+def query_batch_fused(arrays: dict, queries: jnp.ndarray,
+                      cfg: QueryConfig) -> QueryResult:
+    """Fused single-dispatch engine: precomputed all-radius hashes, blockified
+    kernel-backed probes, and a device-side while_loop with real early exit.
+    Produces results identical to `query_batch` without its unrolled all-radii
+    cost or `query_batch_adaptive_host`'s per-radius host sync."""
+    arrays = ensure_fused_arrays(arrays, cfg.block_objs)
+    return _query_batch_fused_jit(_public_arrays(arrays), jnp.asarray(queries), cfg)
+
+
+def query_batch_adaptive(arrays: dict, queries: jnp.ndarray,
+                         cfg: QueryConfig) -> QueryResult:
+    """Adaptive early-exit query — now the fused while_loop engine (the
+    pre-fusion host-driven loop lives on as `query_batch_adaptive_host`)."""
+    return query_batch_fused(arrays, queries, cfg)
 
 
 @partial(jax.jit, static_argnames=("cfg", "t_static"))
@@ -279,11 +519,11 @@ def _one_radius_jit(arrays, queries, qnorm2, state, t_static, cfg):
                         float(cfg.radii[t_static]), cfg)
 
 
-def query_batch_adaptive(arrays: dict, queries: jnp.ndarray, cfg: QueryConfig) -> QueryResult:
-    """Host-driven radius loop with real early exit (CPU benchmarking path):
-    stops as soon as every query in the batch is done, like the sequential
-    algorithm would. Produces identical results to `query_batch`."""
-    arrays, queries, qnorm2 = _prep(arrays, queries)
+def query_batch_adaptive_host(arrays: dict, queries: jnp.ndarray,
+                              cfg: QueryConfig) -> QueryResult:
+    """PRE-FUSION adaptive path, kept as the benchmark baseline: one jitted
+    dispatch plus one device->host sync per radius. Identical results."""
+    arrays, queries, qnorm2 = _prep(_public_arrays(arrays), queries)
     state = _init_state(queries.shape[0], cfg)
     for t in range(len(cfg.radii)):
         state = _one_radius_jit(arrays, queries, qnorm2, state, t, cfg)
@@ -292,11 +532,18 @@ def query_batch_adaptive(arrays: dict, queries: jnp.ndarray, cfg: QueryConfig) -
     return _result_from_state(state, cfg)
 
 
-def make_query_fn(params: LSHParams, *, k: int = 1, **kw):
-    """Convenience: QueryConfig + closured query_batch."""
+def make_query_fn(params: LSHParams, *, k: int = 1, engine: str = "fused", **kw):
+    """Convenience: QueryConfig + closured query engine.
+
+    engine: "fused" (production single-dispatch path) or "oracle" (unrolled
+    reference). Serving closes over the returned fn.
+    """
+    if engine not in ("fused", "oracle"):
+        raise ValueError(f"unknown engine {engine!r}; expected 'fused' or 'oracle'")
     cfg = QueryConfig.from_params(params, k=k, **kw)
+    run = query_batch_fused if engine == "fused" else query_batch
 
     def fn(arrays, queries):
-        return query_batch(arrays, queries, cfg)
+        return run(arrays, queries, cfg)
 
     return cfg, fn

@@ -1,16 +1,22 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
 Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-public wrapper with padding/fallback), ref.py (pure-jnp oracle). Kernels are
-validated on CPU via interpret=True against their oracles (tests/ sweeps
-shapes and dtypes); on TPU the same pallas_call lowers natively.
+public wrapper with padding + backend dispatch: Pallas lowers natively on
+TPU, every other backend gets the pure-jnp oracle), ref.py (the oracle).
+Kernels are validated on CPU via interpret=True against their oracles
+(tests/ sweeps shapes and dtypes); on TPU the same pallas_call lowers
+natively. The fused query engine (core.query.query_batch_fused) consumes the
+ops layer, so backend selection happens in exactly one place per kernel.
 """
-from .lsh_hash import lsh_hash, lsh_hash_ref
-from .l2_distance import l2_distance, l2_distance_ref
+from .lsh_hash import (lsh_hash, lsh_hash_all_radii, lsh_hash_all_radii_ref,
+                       lsh_hash_ref)
+from .l2_distance import (l2_distance, l2_distance_gathered,
+                          l2_distance_gathered_ref, l2_distance_ref)
 from .bucket_probe import bucket_probe, bucket_probe_ref, blockify_entries
 
 __all__ = [
-    "lsh_hash", "lsh_hash_ref",
-    "l2_distance", "l2_distance_ref",
+    "lsh_hash", "lsh_hash_all_radii", "lsh_hash_ref", "lsh_hash_all_radii_ref",
+    "l2_distance", "l2_distance_gathered", "l2_distance_ref",
+    "l2_distance_gathered_ref",
     "bucket_probe", "bucket_probe_ref", "blockify_entries",
 ]

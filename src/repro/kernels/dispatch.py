@@ -1,0 +1,22 @@
+"""Single source of truth for kernel backend dispatch.
+
+Every kernels/*/ops.py wrapper (and the fused query engine's layout
+decisions) asks this module whether the Pallas path should lower natively;
+changing the policy — e.g. adding a GPU lowering or an env override — is a
+one-file edit.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["on_tpu", "use_pallas_default"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def use_pallas_default() -> bool:
+    """Backend policy: Pallas lowers natively on TPU; every other backend
+    runs the pure-jnp oracle (bit-identical math, no interpret overhead)."""
+    return on_tpu()

@@ -1,4 +1,5 @@
-"""jit'd public wrapper for l2_distance: padding + tile selection."""
+"""jit'd public wrappers for l2_distance: padding + tile selection + backend
+dispatch (Pallas on TPU, jnp oracle elsewhere)."""
 from __future__ import annotations
 
 from functools import partial
@@ -6,10 +7,11 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import l2_distance_pallas
-from .ref import l2_distance_ref
+from ..dispatch import use_pallas_default
+from .kernel import l2_distance_gathered_pallas, l2_distance_pallas
+from .ref import l2_distance_gathered_ref, l2_distance_ref
 
-__all__ = ["l2_distance"]
+__all__ = ["l2_distance", "l2_distance_gathered"]
 
 
 def _pad_to(x, mult):
@@ -27,7 +29,8 @@ def l2_distance(q, x, *, tile_q: int = 128, tile_c: int = 128,
     """
     NQ, D = q.shape
     NC, _ = x.shape
-    if not force_pallas and (NQ < tile_q and NC < tile_c):
+    if not force_pallas and (not use_pallas_default()
+                             or (NQ < tile_q and NC < tile_c)):
         return l2_distance_ref(q, x)
     Dp = _pad_to(max(D, 128), 128)
     NQp = _pad_to(max(NQ, tile_q), tile_q)
@@ -36,3 +39,25 @@ def l2_distance(q, x, *, tile_q: int = 128, tile_c: int = 128,
     xp = jnp.zeros((NCp, Dp), jnp.float32).at[:NC, :D].set(x.astype(jnp.float32))
     out = l2_distance_pallas(qp, xp, tile_q=tile_q, tile_c=tile_c, interpret=interpret)
     return out[:NQ, :NC]
+
+
+@partial(jax.jit, static_argnames=("interpret", "force_pallas"))
+def l2_distance_gathered(q, coords, xn2, qn2, *, interpret: bool = False,
+                         force_pallas: bool = False):
+    """Gathered-candidate distances (the query engine's Step-3 epilogue).
+
+    q [Q, D], coords [Q, S, D], xn2 [Q, S], qn2 [Q] -> d2 [Q, S], unclamped
+    (callers mask invalid slots and clamp, as core.query's oracle does).
+    """
+    Q, S, D = coords.shape
+    if not force_pallas and not use_pallas_default():
+        return l2_distance_gathered_ref(q, coords, xn2, qn2)
+    Dp = _pad_to(max(D, 128), 128)
+    Sp = _pad_to(max(S, 128), 128)
+    qp = jnp.zeros((Q, Dp), jnp.float32).at[:, :D].set(q.astype(jnp.float32))
+    cp = jnp.zeros((Q, Sp, Dp), jnp.float32).at[:, :S, :D].set(
+        coords.astype(jnp.float32))
+    xn2p = jnp.zeros((Q, Sp), jnp.float32).at[:, :S].set(xn2.astype(jnp.float32))
+    qn2p = qn2.astype(jnp.float32).reshape(Q, 1)
+    out = l2_distance_gathered_pallas(qp, cp, xn2p, qn2p, interpret=interpret)
+    return out[:, :S]

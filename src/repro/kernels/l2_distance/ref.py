@@ -1,9 +1,9 @@
-"""Pure-jnp oracle for the l2_distance kernel."""
+"""Pure-jnp oracles for the l2_distance kernels."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["l2_distance_ref"]
+__all__ = ["l2_distance_ref", "l2_distance_gathered_ref"]
 
 
 def l2_distance_ref(q, x):
@@ -14,3 +14,15 @@ def l2_distance_ref(q, x):
     qn2 = jnp.sum(q * q, axis=-1, keepdims=True)
     xn2 = jnp.sum(x * x, axis=-1, keepdims=True).T
     return jnp.maximum(qn2 + xn2 - 2.0 * dot, 0.0)
+
+
+def l2_distance_gathered_ref(q, coords, xn2, qn2):
+    """Per-query gathered-candidate distances (the probe epilogue form).
+
+    q [Q, D], coords [Q, S, D] (candidate coordinates, already gathered),
+    xn2 [Q, S] precomputed ||x||^2, qn2 [Q] -> d2 [Q, S], UNclamped (the
+    caller masks invalid slots and clamps, mirroring core.query's oracle).
+    """
+    dot = jnp.einsum("qsd,qd->qs", coords.astype(jnp.float32),
+                     q.astype(jnp.float32), preferred_element_type=jnp.float32)
+    return xn2 - 2.0 * dot + qn2[:, None]

@@ -6,13 +6,21 @@ random projection X @ A is an MXU matmul; the quantize/combine epilogue runs
 on the VPU in the same VMEM residency (no HBM round-trip for the [N, L*m]
 intermediate, which is the whole point of fusing).
 
+The effective bucket width w*R is a *per-column vector* operand, which lets
+one kernel launch hash the entire radius schedule at once: the caller flattens
+[r, L, m] hash functions into LM = r*L*m columns, each carrying its own
+radius' width (ops.lsh_hash_all_radii) — one MXU matmul for the whole
+schedule instead of one dispatch per radius.
+
 Layout contract (enforced by ops.py):
   x:    [N, D]        float32, D % 128 == 0 (zero-padded)
   a:    [D, LMp]      float32, LMp = pad(L*m, 128)
   bvec: [1, LMp]      float32, pre-multiplied shift b * (w*R)
+  wrvec:[1, LMp]      float32, per-column effective width w*R (1 in padding
+                      columns so the divide is safe)
   rm:   [1, LMp]      int32, random odd multipliers (0 in padding columns)
-The (w*R) divisor is a compile-time constant so the quantization math is
-bit-identical to the ref oracle: floor((x@a + b*wr) / wr).
+The quantization math is bit-identical to the ref oracle:
+floor((x@a + b*wr) / wr), evaluated with the same f32 op order.
   out bucket: [N, Lp] int32,  Lp = pad(L, 128)
   out fp:     [N, Lp] int32
 
@@ -39,14 +47,15 @@ def _fmix32(h):
     return h
 
 
-def _kernel(x_ref, a_ref, b_ref, rm_ref, bucket_ref, fp_ref, *, L, m, u, fp_bits, w_r):
+def _kernel(x_ref, a_ref, b_ref, wr_ref, rm_ref, bucket_ref, fp_ref, *, L, m, u, fp_bits):
     x = x_ref[...]                      # [TN, D]
     a = a_ref[...]                      # [D, LMp]
     b = b_ref[...]                      # [1, LMp] (pre-multiplied by w_r)
+    wr = wr_ref[...]                    # [1, LMp] (per-column w*R)
     rm = rm_ref[...]                    # [1, LMp]
     # MXU: projection; epilogue quantizes with the same op order as the oracle
     proj = jnp.dot(x, a, preferred_element_type=jnp.float32)  # [TN, LMp]
-    hj = jnp.floor((proj + b) / jnp.float32(w_r)).astype(jnp.int32)
+    hj = jnp.floor((proj + b) / wr).astype(jnp.int32)
     # combine m per-function hashes per table: padding columns have rm == 0
     prod = hj.astype(jnp.uint32) * rm.astype(jnp.uint32)      # [TN, LMp]
     lm = L * m
@@ -68,29 +77,34 @@ def lsh_hash_pallas(
     x: jnp.ndarray,
     a_scaled: jnp.ndarray,
     bvec: jnp.ndarray,
+    wrvec: jnp.ndarray,
     rm: jnp.ndarray,
     *,
     L: int,
     m: int,
     u: int,
     fp_bits: int,
-    w_r: float,
     tile_n: int = 256,
     interpret: bool = False,
 ):
-    """Raw pallas_call wrapper; see ops.lsh_hash for the padded public API."""
+    """Raw pallas_call wrapper; see ops.lsh_hash for the padded public API.
+
+    `L` here is the number of compound hashes in the launch — the single-radius
+    path passes the table count, the all-radius path passes r * L.
+    """
     N, D = x.shape
     LMp = a_scaled.shape[1]
     Lp = max(128, -(-L // 128) * 128)
     assert N % tile_n == 0, (N, tile_n)
     grid = (N // tile_n,)
-    kernel = functools.partial(_kernel, L=L, m=m, u=u, fp_bits=fp_bits, w_r=w_r)
+    kernel = functools.partial(_kernel, L=L, m=m, u=u, fp_bits=fp_bits)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((tile_n, D), lambda i: (i, 0)),
             pl.BlockSpec((D, LMp), lambda i: (0, 0)),
+            pl.BlockSpec((1, LMp), lambda i: (0, 0)),
             pl.BlockSpec((1, LMp), lambda i: (0, 0)),
             pl.BlockSpec((1, LMp), lambda i: (0, 0)),
         ],
@@ -103,4 +117,4 @@ def lsh_hash_pallas(
             jax.ShapeDtypeStruct((N, Lp), jnp.int32),
         ],
         interpret=interpret,
-    )(x, a_scaled, bvec, rm)
+    )(x, a_scaled, bvec, wrvec, rm)

@@ -1,6 +1,18 @@
-"""jit'd public wrapper for the lsh_hash Pallas kernel: handles padding,
-layout, and VMEM budgeting; falls back to the jnp reference when the problem
-is too small to tile profitably."""
+"""jit'd public wrappers for the lsh_hash Pallas kernel: padding, layout,
+VMEM budgeting, and backend dispatch.
+
+Two entry points:
+  * ``lsh_hash``            — one (radius, family) block (build-time path);
+  * ``lsh_hash_all_radii``  — the whole radius schedule in ONE kernel launch
+    (the fused query engine's Step 1): [r, L, m] hash functions flatten into
+    r*L*m projection columns, each carrying its own effective width w*R, so
+    the entire schedule costs a single MXU matmul instead of r dispatches.
+
+Dispatch policy: Pallas lowers natively on TPU; every other backend gets the
+pure-jnp oracle (bit-identical math, XLA-fused), keeping CPU tests and
+benchmarks honest without interpret-mode overhead. `force_pallas=True` (with
+`interpret=True` off-TPU) pins the kernel path for parity tests.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -8,16 +20,37 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..dispatch import use_pallas_default
 from .kernel import lsh_hash_pallas
-from .ref import lsh_hash_ref
+from .ref import lsh_hash_all_radii_ref, lsh_hash_ref
 
-__all__ = ["lsh_hash"]
+__all__ = ["lsh_hash", "lsh_hash_all_radii"]
 
 _VMEM_BUDGET_BYTES = 8 * 2**20  # projection block a[D, LMp] must fit comfortably
 
 
 def _pad_to(x, mult):
     return -(-x // mult) * mult
+
+
+def _pack_and_hash(x, a2, bwr, wr, rm_flat, *, n_hashes, m, u, fp_bits,
+                   tile_n, interpret):
+    """Shared pack path: a2 [LM, D] column block with per-column widths."""
+    N, D = x.shape
+    LM = a2.shape[0]
+    Dp = _pad_to(max(D, 128), 128)
+    LMp = _pad_to(max(LM, 128), 128)
+    Np = _pad_to(max(N, tile_n), tile_n)
+    x_p = jnp.zeros((Np, Dp), jnp.float32).at[:N, :D].set(x.astype(jnp.float32))
+    a_p = jnp.zeros((Dp, LMp), jnp.float32).at[:D, :LM].set(a2.T.astype(jnp.float32))
+    b_p = jnp.zeros((1, LMp), jnp.float32).at[0, :LM].set(bwr.astype(jnp.float32))
+    wr_p = jnp.ones((1, LMp), jnp.float32).at[0, :LM].set(wr.astype(jnp.float32))
+    rm_p = jnp.zeros((1, LMp), jnp.int32).at[0, :LM].set(rm_flat.astype(jnp.int32))
+    bucket, fp = lsh_hash_pallas(
+        x_p, a_p, b_p, wr_p, rm_p, L=n_hashes, m=m, u=u, fp_bits=fp_bits,
+        tile_n=tile_n, interpret=interpret,
+    )
+    return bucket[:N, :n_hashes], fp[:N, :n_hashes]
 
 
 @partial(jax.jit, static_argnames=("w_r", "u", "fp_bits", "tile_n", "interpret", "force_pallas"))
@@ -34,19 +67,49 @@ def lsh_hash(x, a, b, rm, *, w_r: float, u: int, fp_bits: int,
     LM = L * m
     LMp = _pad_to(max(LM, 128), 128)
     a_block_bytes = Dp * LMp * 4
-    if not force_pallas and (a_block_bytes > _VMEM_BUDGET_BYTES):
+    if not force_pallas and (not use_pallas_default()
+                             or a_block_bytes > _VMEM_BUDGET_BYTES):
         return lsh_hash_ref(x, a, b, rm, w_r=w_r, u=u, fp_bits=fp_bits)
-
-    Np = _pad_to(max(N, tile_n), tile_n)
-    x_p = jnp.zeros((Np, Dp), jnp.float32).at[:N, :D].set(x.astype(jnp.float32))
-    a2 = a.reshape(L * m, -1).T.astype(jnp.float32)  # [D, LM]
-    a_p = jnp.zeros((Dp, LMp), jnp.float32).at[:D, :LM].set(a2)
+    wr = jnp.full((LM,), jnp.float32(w_r))
     # pre-multiply the shift (oracle computes floor((x.a + b*wr)/wr))
-    b_p = jnp.zeros((1, LMp), jnp.float32).at[0, :LM].set(
-        (b.reshape(-1) * jnp.float32(w_r)).astype(jnp.float32))
-    rm_p = jnp.zeros((1, LMp), jnp.int32).at[0, :LM].set(rm.reshape(-1).astype(jnp.int32))
-    bucket, fp = lsh_hash_pallas(
-        x_p, a_p, b_p, rm_p, L=L, m=m, u=u, fp_bits=fp_bits, w_r=w_r,
-        tile_n=tile_n, interpret=interpret,
+    bwr = b.reshape(-1).astype(jnp.float32) * jnp.float32(w_r)
+    return _pack_and_hash(
+        x, a.reshape(LM, -1), bwr, wr, rm.reshape(-1),
+        n_hashes=L, m=m, u=u, fp_bits=fp_bits, tile_n=tile_n, interpret=interpret,
     )
-    return bucket[:N, :L], fp[:N, :L]
+
+
+@partial(jax.jit, static_argnames=("w", "radii", "u", "fp_bits", "tile_n",
+                                   "interpret", "force_pallas"))
+def lsh_hash_all_radii(x, a, b, rm, *, w: float, radii: tuple, u: int,
+                       fp_bits: int, tile_n: int = 256, interpret: bool = False,
+                       force_pallas: bool = False):
+    """Hash points under the FULL radius schedule in one dispatch.
+
+    x [N, D]; a [r, L, m, D]; b/rm [r, L, m]; radii = static schedule.
+    Returns (bucket, fp) [r, N, L] int32 — same layout as stacking the
+    per-radius results.
+    """
+    N, D = x.shape
+    r, L, m, _ = a.shape
+    assert len(radii) == r, (len(radii), r)
+    RLM = r * L * m
+    Dp = _pad_to(max(D, 128), 128)
+    RLMp = _pad_to(max(RLM, 128), 128)
+    a_block_bytes = Dp * RLMp * 4
+    if not force_pallas and (not use_pallas_default()
+                             or a_block_bytes > _VMEM_BUDGET_BYTES):
+        return lsh_hash_all_radii_ref(x, a, b, rm, w=w, radii=radii, u=u,
+                                      fp_bits=fp_bits)
+    # per-column effective width: radius t owns columns [t*L*m, (t+1)*L*m)
+    wr_cols = jnp.repeat(
+        jnp.asarray([float(w) * float(rad) for rad in radii], jnp.float32), L * m)
+    bwr = b.reshape(-1).astype(jnp.float32) * wr_cols
+    bucket, fp = _pack_and_hash(
+        x, a.reshape(RLM, -1), bwr, wr_cols, rm.reshape(-1),
+        n_hashes=r * L, m=m, u=u, fp_bits=fp_bits, tile_n=tile_n,
+        interpret=interpret,
+    )
+    # [N, r*L] -> [r, N, L] (row-major columns are (t, l) ordered)
+    return (jnp.moveaxis(bucket.reshape(N, r, L), 1, 0),
+            jnp.moveaxis(fp.reshape(N, r, L), 1, 0))

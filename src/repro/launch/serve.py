@@ -46,9 +46,9 @@ def serve_ann(args):
               f"t/query={dt/args.queries*1e6:.0f}us")
         return
     idx = E2LSHoS.build(ds.db, gamma=args.gamma, max_L=args.max_L, seed=args.seed)
-    mq = measured_query(idx, ds.queries, k=args.k)
+    mq = measured_query(idx, ds.queries, k=args.k, engine=args.engine)
     ratio = overall_ratio(np.asarray(mq.result.dists), ds.gt_dists[:, :args.k])
-    print(f"[single] ratio={ratio:.4f} nio/query={mq.nio_mean:.0f} "
+    print(f"[single/{args.engine}] ratio={ratio:.4f} nio/query={mq.nio_mean:.0f} "
           f"cands={mq.cands_mean:.0f} radii={mq.radii_mean:.2f} "
           f"t/query={mq.t_compute_per_query*1e6:.0f}us")
     fp = idx.footprint()
@@ -70,16 +70,12 @@ def serve_lm(args):
     retrieval_fn = None
     if args.retrieval:
         # kNN-LM-style: datastore of random "context" embeddings in the
-        # model's output space; decode probes it every step
+        # model's output space; decode probes it every step through the fused
+        # single-dispatch engine (all-device, no per-step host round-trip)
         dstore = rng.normal(size=(args.dstore, cfg.vocab)).astype(np.float32)
         dstore /= np.linalg.norm(dstore, axis=1, keepdims=True)
         idx = E2LSHoS.build(dstore, gamma=0.8, max_L=16, seed=args.seed)
-
-        def retrieval_fn(hidden):
-            h = np.array(hidden, np.float32)
-            h /= np.maximum(np.linalg.norm(h, axis=1, keepdims=True), 1e-9)
-            res = idx.query(jnp.asarray(h), k=args.k)
-            return res.ids, res.dists
+        retrieval_fn = ServeEngine.make_retrieval_fn(idx, k=args.k)
 
     eng = ServeEngine(model, params, max_seq=T + args.steps + 1,
                       cache_dtype=jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16,
@@ -98,6 +94,10 @@ def serve_lm(args):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=("ann", "lm"), default="ann")
+    ap.add_argument("--engine", choices=("fused", "oracle", "host"),
+                    default="fused",
+                    help="query dispatch path: fused single-dispatch engine, "
+                         "unrolled oracle, or the pre-fusion host loop")
     ap.add_argument("--dataset", default="sift")
     ap.add_argument("--n", type=int, default=20000)
     ap.add_argument("--queries", type=int, default=64)

@@ -35,6 +35,29 @@ class ServeEngine:
         self._prefill = jax.jit(self.model.prefill)
         self._decode = jax.jit(self.model.decode_step)
 
+    @staticmethod
+    def make_retrieval_fn(index, *, k: int = 8, normalize: bool = True) -> Callable:
+        """Retrieval hook closing over the FUSED single-dispatch query engine.
+
+        `index` is a core.E2LSHoS; the returned fn keeps the whole probe on
+        device (one dispatch per decode step, no host round-trip), so decode
+        streams are never stalled by per-radius syncs.
+        """
+        from ..core.query import query_batch_fused
+
+        cfg = index.query_config(k=k)
+        arrays = index.fused_arrays(cfg.block_objs)
+
+        def retrieval_fn(hidden):
+            h = hidden.astype(jnp.float32)
+            if normalize:
+                h = h / jnp.maximum(
+                    jnp.linalg.norm(h, axis=1, keepdims=True), 1e-9)
+            res = query_batch_fused(arrays, h, cfg)
+            return res.ids, res.dists
+
+        return retrieval_fn
+
     def generate(self, batch: dict, *, steps: int = 16) -> GenerationResult:
         B = batch["tokens"].shape[0]
         cache = self.model.init_cache(B, self.max_seq, self.cache_dtype)

@@ -3,7 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # property-based sweep when the dev dep is present, fixed grid otherwise
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.hashing import (HashFamily, hash_points_radius,
                                 hash_points_radius_np, make_hash_family)
@@ -14,10 +19,7 @@ def _family(r=2, L=4, m=6, d=16, w=4.0, u=12, fp_bits=12, seed=0):
                             w=w, u=u, fp_bits=fp_bits)
 
 
-@settings(max_examples=10, deadline=None)
-@given(n=st.integers(1, 64), d=st.sampled_from([4, 16, 33]),
-       t=st.integers(0, 1))
-def test_jnp_matches_numpy_oracle(n, d, t):
+def _check_jnp_matches_numpy_oracle(n, d, t):
     fam = _family(d=d)
     rng = np.random.default_rng(n)
     x = rng.normal(size=(n, d)).astype(np.float32)
@@ -27,6 +29,20 @@ def test_jnp_matches_numpy_oracle(n, d, t):
     bk2, fp2 = hash_points_radius_np(fam_np, x, t, float(2 ** t), fam.u, fam.fp_bits)
     np.testing.assert_array_equal(np.asarray(bk), bk2)
     np.testing.assert_array_equal(np.asarray(fp), fp2)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(1, 64), d=st.sampled_from([4, 16, 33]),
+           t=st.integers(0, 1))
+    def test_jnp_matches_numpy_oracle(n, d, t):
+        _check_jnp_matches_numpy_oracle(n, d, t)
+else:
+    @pytest.mark.parametrize("n,d,t", [
+        (1, 4, 0), (7, 16, 1), (31, 33, 0), (64, 16, 1),
+    ])
+    def test_jnp_matches_numpy_oracle(n, d, t):
+        _check_jnp_matches_numpy_oracle(n, d, t)
 
 
 def test_bucket_and_fp_ranges():

@@ -5,7 +5,10 @@ import numpy as np
 import pytest
 
 from repro.kernels import (blockify_entries, bucket_probe, bucket_probe_ref,
-                           l2_distance, l2_distance_ref, lsh_hash, lsh_hash_ref)
+                           l2_distance, l2_distance_gathered,
+                           l2_distance_gathered_ref, l2_distance_ref, lsh_hash,
+                           lsh_hash_all_radii, lsh_hash_all_radii_ref,
+                           lsh_hash_ref)
 
 RNG = np.random.default_rng(0)
 
@@ -42,6 +45,29 @@ def test_lsh_hash_radius_sweep(w_r):
     np.testing.assert_array_equal(np.asarray(bk), np.asarray(bk_r))
 
 
+@pytest.mark.parametrize("r,L,m,d,radii", [
+    (1, 4, 3, 16, (1.0,)),
+    (3, 8, 6, 32, (1.0, 2.0, 4.0)),
+    (5, 5, 4, 100, (1.0, 2.0, 4.0, 8.0, 16.0)),
+])
+def test_lsh_hash_all_radii_matches_ref(r, L, m, d, radii):
+    """One fused kernel launch over the whole radius schedule == stacked
+    per-radius oracle (the fused query engine's Step 1 contract)."""
+    x = RNG.normal(size=(70, d)).astype(np.float32)
+    a = RNG.normal(size=(r, L, m, d)).astype(np.float32)
+    b = RNG.uniform(size=(r, L, m)).astype(np.float32)
+    rm = ((RNG.integers(1, 2**31, size=(r, L, m)).astype(np.uint32) << 1) | 1).astype(np.int32)
+    kw = dict(w=4.0, radii=radii, u=12, fp_bits=10)
+    bk, fp = lsh_hash_all_radii(jnp.asarray(x), jnp.asarray(a), jnp.asarray(b),
+                                jnp.asarray(rm), interpret=True,
+                                force_pallas=True, **kw)
+    bk_r, fp_r = lsh_hash_all_radii_ref(jnp.asarray(x), jnp.asarray(a),
+                                        jnp.asarray(b), jnp.asarray(rm), **kw)
+    assert bk.shape == (r, 70, L)
+    np.testing.assert_array_equal(np.asarray(bk), np.asarray(bk_r))
+    np.testing.assert_array_equal(np.asarray(fp), np.asarray(fp_r))
+
+
 @pytest.mark.parametrize("nq,nc,d,dtype", [
     (1, 1, 8, np.float32), (10, 50, 32, np.float32),
     (130, 200, 100, np.float32), (64, 64, 960, np.float32),
@@ -56,6 +82,23 @@ def test_l2_distance_matches_ref(nq, nc, d, dtype):
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
     # and vs an independent numpy computation
     ref2 = ((q.astype(np.float64)[:, None] - x.astype(np.float64)[None]) ** 2).sum(-1)
+    np.testing.assert_allclose(got, ref2, rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("q,s,d", [(1, 1, 8), (5, 17, 24), (48, 128, 100)])
+def test_l2_distance_gathered_matches_ref(q, s, d):
+    """Per-query candidate epilogue (the fused engine's Step 3 form)."""
+    qs = RNG.normal(size=(q, d)).astype(np.float32)
+    coords = RNG.normal(size=(q, s, d)).astype(np.float32)
+    xn2 = (coords.astype(np.float64) ** 2).sum(-1).astype(np.float32)
+    qn2 = (qs.astype(np.float64) ** 2).sum(-1).astype(np.float32)
+    got = np.asarray(l2_distance_gathered(
+        jnp.asarray(qs), jnp.asarray(coords), jnp.asarray(xn2),
+        jnp.asarray(qn2), interpret=True, force_pallas=True))
+    want = np.asarray(l2_distance_gathered_ref(
+        jnp.asarray(qs), jnp.asarray(coords), jnp.asarray(xn2), jnp.asarray(qn2)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    ref2 = ((qs.astype(np.float64)[:, None] - coords.astype(np.float64)) ** 2).sum(-1)
     np.testing.assert_allclose(got, ref2, rtol=2e-2, atol=2e-2)
 
 

@@ -3,7 +3,12 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # property-based sweep when the dev dep is present, fixed grid otherwise
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.probabilities import (
     collision_probability, radii_schedule, rho, solve_params,
@@ -11,21 +16,41 @@ from repro.core.probabilities import (
 )
 
 
-@settings(max_examples=30, deadline=None)
-@given(s1=st.floats(0.05, 50.0), s2=st.floats(0.05, 50.0),
-       w=st.floats(0.5, 16.0))
-def test_collision_probability_monotone_decreasing(s1, s2, w):
+def _check_monotone_decreasing(s1, s2, w):
     lo, hi = min(s1, s2), max(s1, s2)
     p_lo = float(collision_probability(lo, w))
     p_hi = float(collision_probability(hi, w))
     assert 0.0 <= p_hi <= p_lo <= 1.0
 
 
-@settings(max_examples=20, deadline=None)
-@given(s=st.floats(0.1, 10.0), w1=st.floats(0.5, 8.0), w2=st.floats(0.5, 8.0))
-def test_collision_probability_monotone_in_w(s, w1, w2):
+def _check_monotone_in_w(s, w1, w2):
     lo, hi = min(w1, w2), max(w1, w2)
     assert collision_probability(s, hi) >= collision_probability(s, lo) - 1e-12
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(s1=st.floats(0.05, 50.0), s2=st.floats(0.05, 50.0),
+           w=st.floats(0.5, 16.0))
+    def test_collision_probability_monotone_decreasing(s1, s2, w):
+        _check_monotone_decreasing(s1, s2, w)
+
+    @settings(max_examples=20, deadline=None)
+    @given(s=st.floats(0.1, 10.0), w1=st.floats(0.5, 8.0), w2=st.floats(0.5, 8.0))
+    def test_collision_probability_monotone_in_w(s, w1, w2):
+        _check_monotone_in_w(s, w1, w2)
+else:
+    @pytest.mark.parametrize("s1,s2,w", [
+        (0.05, 50.0, 0.5), (1.0, 2.0, 4.0), (10.0, 0.3, 16.0), (5.0, 5.0, 2.0),
+    ])
+    def test_collision_probability_monotone_decreasing(s1, s2, w):
+        _check_monotone_decreasing(s1, s2, w)
+
+    @pytest.mark.parametrize("s,w1,w2", [
+        (0.1, 0.5, 8.0), (2.0, 4.0, 1.0), (10.0, 3.0, 3.0),
+    ])
+    def test_collision_probability_monotone_in_w(s, w1, w2):
+        _check_monotone_in_w(s, w1, w2)
 
 
 def test_collision_probability_monte_carlo():

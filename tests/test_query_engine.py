@@ -1,0 +1,150 @@
+"""Engine parity: the fused single-dispatch engine vs the unrolled oracle.
+
+The contract (docs/query_engine.md): on the same backend, `query_batch_fused`
+(precomputed all-radius hashes + blockified kernel-dispatch probes + while_loop
+early exit) must match `query_batch` (the unrolled reference) BIT-FOR-BIT on
+ids, dists, found, radii_searched and both I/O counters — including under the
+`s_cap` and `block_objs` override knobs. The pre-fusion host loop
+(`query_batch_adaptive_host`) must match as well: early exit only skips radii
+no query would use.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ensure_fused_arrays, make_query_fn, query_batch,
+                        query_batch_adaptive, query_batch_adaptive_host,
+                        query_batch_fused)
+from repro.core.query import QueryConfig
+
+_EXACT_FIELDS = ("ids", "found", "radii_searched", "nio_table", "nio_blocks",
+                 "cands_checked")
+
+
+def _assert_identical(ref, fus, *, probe_sizes=False):
+    for name in _EXACT_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, name)), np.asarray(getattr(fus, name)),
+            err_msg=f"field {name} diverged from the oracle")
+    # bit-identical floats too (same backend, same op order by contract)
+    np.testing.assert_array_equal(np.asarray(ref.dists), np.asarray(fus.dists))
+    np.testing.assert_array_equal(np.asarray(ref.nio), np.asarray(fus.nio))
+    if probe_sizes:
+        np.testing.assert_array_equal(np.asarray(ref.probe_sizes),
+                                      np.asarray(fus.probe_sizes))
+
+
+@pytest.mark.parametrize("k", [1, 8])
+def test_fused_matches_oracle(built_index, clustered_data, k):
+    q = clustered_data["queries"]
+    ref = built_index.query(q, k=k, engine="oracle")
+    fus = built_index.query(q, k=k, engine="fused")
+    _assert_identical(ref, fus)
+
+
+def test_adaptive_entry_point_is_fused(built_index, clustered_data):
+    """query_batch_adaptive (the public adaptive path) routes to the engine."""
+    q = clustered_data["queries"][:16]
+    cfg = built_index.query_config(k=3)
+    arrays = built_index.fused_arrays(cfg.block_objs)
+    a = query_batch_adaptive(arrays, jnp.asarray(q), cfg)
+    b = query_batch_fused(arrays, jnp.asarray(q), cfg)
+    _assert_identical(a, b)
+
+
+def test_host_loop_matches_fused(built_index, clustered_data):
+    """The pre-fusion per-radius host loop agrees with the engine. Its
+    per-radius jit programs fuse float ops differently than the one-dispatch
+    graph, so distances carry ulp-level noise (same contract the seed's
+    test_adaptive_matches_full documented) — ids can swap only on near-ties;
+    the algorithmic outputs (found/radii/I/O) stay exact."""
+    q = clustered_data["queries"][:24]
+    host = built_index.query(q, k=3, engine="host")
+    fus = built_index.query(q, k=3, engine="fused")
+    assert np.mean(np.asarray(host.ids) == np.asarray(fus.ids)) > 0.95
+    np.testing.assert_allclose(np.asarray(host.dists), np.asarray(fus.dists),
+                               rtol=1e-3, atol=1e-4)
+    for name in ("found", "radii_searched", "nio_table", "nio_blocks",
+                 "cands_checked"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(host, name)), np.asarray(getattr(fus, name)),
+            err_msg=f"field {name} diverged")
+
+
+@pytest.mark.parametrize("s_cap", [8, None])
+def test_fused_matches_oracle_with_s_cap(built_index, clustered_data, s_cap):
+    q = clustered_data["queries"][:24]
+    s = s_cap if s_cap is not None else built_index.params.S
+    ref = built_index.query(q, k=1, s_cap=s, engine="oracle")
+    fus = built_index.query(q, k=1, s_cap=s, engine="fused")
+    _assert_identical(ref, fus)
+
+
+def test_fused_matches_oracle_with_block_objs(built_index, clustered_data):
+    """The narrower-gather-chunk timing knob re-blockifies and stays exact."""
+    q = clustered_data["queries"][:24]
+    ref = built_index.query(q, k=1, block_objs=16, engine="oracle")
+    fus = built_index.query(q, k=1, block_objs=16, engine="fused")
+    _assert_identical(ref, fus)
+
+
+def test_fused_probe_sizes_match_oracle(built_index, clustered_data):
+    q = clustered_data["queries"][:16]
+    ref = built_index.query(q, k=1, collect_probe_sizes=True, engine="oracle")
+    fus = built_index.query(q, k=1, collect_probe_sizes=True, engine="fused")
+    _assert_identical(ref, fus, probe_sizes=True)
+
+
+def test_fused_engine_is_one_jitted_dispatch(built_index, clustered_data):
+    """The fused engine lowers to ONE jitted computation: tracing its jit
+    wrapper once covers the whole radius schedule (no per-radius retrace), and
+    it jits from inside an outer jit (serving composes it)."""
+    cfg = built_index.query_config(k=1)
+    arrays = built_index.fused_arrays(cfg.block_objs)
+    jit_arrays = {k: v for k, v in arrays.items() if not k.startswith("_")}
+    from repro.core.query import _query_batch_fused_jit
+    q = jnp.asarray(clustered_data["queries"][:8])
+    lowered = _query_batch_fused_jit.lower(jit_arrays, q, cfg)
+    text = lowered.as_text()
+    assert "while" in text  # radius loop is a device-side while_loop
+    out = _query_batch_fused_jit(jit_arrays, q, cfg)
+    assert out.ids.shape == (8, 1)
+
+
+def test_make_query_fn_engine_selection(built_index, clustered_data):
+    q = jnp.asarray(clustered_data["queries"][:8])
+    cfg_f, fn_f = make_query_fn(built_index.params, k=2, engine="fused")
+    cfg_o, fn_o = make_query_fn(built_index.params, k=2, engine="oracle")
+    assert cfg_f == cfg_o
+    arrays = built_index.fused_arrays(cfg_f.block_objs)
+    _assert_identical(fn_o(arrays, q), fn_f(arrays, q))
+
+
+def test_ensure_fused_arrays_idempotent(built_index):
+    arrays = built_index.arrays()
+    bo = built_index.params.block_objs
+    a1 = ensure_fused_arrays(arrays, bo)
+    a2 = ensure_fused_arrays(a1, bo)
+    assert a2 is a1  # an already-augmented dict is returned untouched
+    assert "ids_blocks" in a1 and "blocks_head" in a1
+    # repeated functional-API calls with the same source dict blockify once
+    assert ensure_fused_arrays(arrays, bo) is a1
+    assert ensure_fused_arrays(arrays, 16) is ensure_fused_arrays(arrays, 16)
+    # the source dict gains only the private cache, not the layout itself
+    assert "ids_blocks" not in arrays
+
+
+def test_queryconfig_replace_constructor_path():
+    cfg = QueryConfig(L=8, m=4, u=10, fp_bits=8, w=4.0, c=2.0,
+                      radii=(1.0, 2.0), S=96, block_objs=99)
+    assert cfg.sbuf == 128
+    capped = cfg.replace(s_cap=300)
+    assert capped.S == 300 and capped.sbuf == 384  # re-derived, not stale
+    narrow = cfg.replace(block_objs=16)
+    assert narrow.block_objs == 16
+    assert narrow.max_chain == -(-cfg.S // 16) + 1
+    both = cfg.replace(s_cap=32, block_objs=16)
+    assert both.S == 32 and both.max_chain == 3 and both.sbuf == 128
+    # frozen dataclass: the original is untouched
+    assert cfg.S == 96 and cfg.block_objs == 99

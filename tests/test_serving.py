@@ -45,6 +45,22 @@ def test_retrieval_hook_runs():
     assert out.neighbors.shape == (2, 3, 2)
 
 
+def test_make_retrieval_fn_closes_over_fused_engine():
+    """The engine-level hook keeps the probe on device and matches a direct
+    fused query on the same (normalized) inputs."""
+    rng = np.random.default_rng(5)
+    dstore = rng.normal(size=(3000, 32)).astype(np.float32)
+    dstore /= np.linalg.norm(dstore, axis=1, keepdims=True)
+    idx = E2LSHoS.build(dstore, gamma=0.8, max_L=8, seed=1)
+    hook = ServeEngine.make_retrieval_fn(idx, k=4)
+    h = jnp.asarray(rng.normal(size=(6, 32)).astype(np.float32))
+    ids, dists = hook(h)
+    assert ids.shape == (6, 4) and dists.shape == (6, 4)
+    hn = h / jnp.maximum(jnp.linalg.norm(h, axis=1, keepdims=True), 1e-9)
+    direct = idx.query(hn, k=4, engine="fused")
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(direct.ids))
+
+
 def test_overall_ratio_math():
     d = np.array([[1.0, 2.0], [3.0, 3.0]])
     g = np.array([[1.0, 1.0], [3.0, 2.0]])

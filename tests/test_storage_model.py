@@ -2,7 +2,12 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # property-based sweep when the dev dep is present, fixed grid otherwise
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.storage import (
     DEVICES, INTERFACES, TABLE5_CONFIGS, StorageConfig,
@@ -20,13 +25,25 @@ def test_paper_table2_values():
     assert INTERFACES["xlfdd"].t_request == 50e-9
 
 
-@settings(max_examples=40, deadline=None)
-@given(tc=st.floats(1e-6, 1e-2), nio=st.integers(1, 5000),
-       dev=st.sampled_from(["cssd", "essd", "xlfdd"]),
-       iface=st.sampled_from(["io_uring", "spdk", "xlfdd"]))
-def test_async_never_slower_than_sync(tc, nio, dev, iface):
+def _check_async_never_slower_than_sync(tc, nio, dev, iface):
     cfg = StorageConfig(DEVICES[dev], 1, INTERFACES[iface])
     assert t_async(tc, nio, cfg) <= t_sync(tc, nio, cfg) + 1e-12
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(tc=st.floats(1e-6, 1e-2), nio=st.integers(1, 5000),
+           dev=st.sampled_from(["cssd", "essd", "xlfdd"]),
+           iface=st.sampled_from(["io_uring", "spdk", "xlfdd"]))
+    def test_async_never_slower_than_sync(tc, nio, dev, iface):
+        _check_async_never_slower_than_sync(tc, nio, dev, iface)
+else:
+    @pytest.mark.parametrize("tc,nio,dev,iface", [
+        (1e-6, 1, "cssd", "io_uring"), (1e-3, 348, "essd", "spdk"),
+        (1e-2, 5000, "xlfdd", "xlfdd"), (1e-4, 800, "cssd", "spdk"),
+    ])
+    def test_async_never_slower_than_sync(tc, nio, dev, iface):
+        _check_async_never_slower_than_sync(tc, nio, dev, iface)
 
 
 def test_eq6_eq7_shapes():
