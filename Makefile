@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify test bench-query deps
+.PHONY: verify test bench-query bench-smoke deprecation-lane deps
 
 deps:
 	$(PY) -m pip install -r requirements.txt
@@ -15,3 +15,17 @@ test:
 
 bench-query:
 	$(PY) benchmarks/bench_query_engine.py
+
+# schema-validation pass: 2 repeats, scratch output, asserts the
+# BENCH_query.json key layout (CI runs this; publishing numbers stays manual)
+bench-smoke:
+	$(PY) benchmarks/bench_query_engine.py --smoke
+
+# import-time firewall: importing the repro surface must not touch any
+# deprecated wrapper. The filter is scoped to repro.* (same contract as
+# pytest.ini) so third-party import-time deprecations can't fail the lane.
+deprecation-lane:
+	$(PY) -c "import warnings; \
+	warnings.filterwarnings('error', category=DeprecationWarning, module=r'repro\..*'); \
+	import repro, repro.core, repro.core.distributed, repro.serving, \
+	repro.launch.serve, repro.launch.dryrun"

@@ -1,14 +1,14 @@
-"""Query-engine dispatch benchmark: fused single-dispatch vs pre-fusion paths.
+"""Query-engine dispatch benchmark: the SearchEngine execution plans.
 
-Measures what the fusion PR actually changed — dispatch structure, not probe
-math (candidates and I/O are bit-identical across engines):
+Measures dispatch structure, not probe math (candidates and I/O are
+bit-identical across plans):
 
   * host  — PRE-refactor adaptive path: one jitted dispatch + one
-            device->host sync per radius (query_batch_adaptive_host);
+            device->host sync per radius (plan="host");
   * oracle — unrolled all-radii jit (no per-radius sync, but no early exit
             either; this was the pre-refactor TPU serving dispatch);
-  * fused — the engine: all-radius hashes + table lookups in batched
-            pre-loop passes, blockified single-gather chain walks,
+  * fused — the production plan: all-radius hashes + table lookups in batched
+            pre-loop passes, natively blockified single-gather chain walks,
             lax.while_loop early exit, ONE dispatch per batch.
 
 Two workload shapes:
@@ -19,12 +19,16 @@ Two workload shapes:
                  `speedup_fused_vs_host` (>= 2x) is measured on this shape.
   * throughput — bigger batch where nearly every query finishes at the first
                  radius. Here device-side early exit dominates: the fused
-                 engine skips the radii the unrolled oracle must pay for.
+                 plan skips the radii the unrolled oracle must pay for.
 
 Writes BENCH_query.json at the repo root with queries/sec and p50 per-batch
-dispatch latency per engine and workload.
+dispatch latency per plan and workload.
 
     PYTHONPATH=src python benchmarks/bench_query_engine.py [--repeats 40]
+
+`--smoke` (the `make bench-smoke` CI lane) runs a 2-repeat pass, writes to a
+scratch path, and validates the payload schema — so schema drift in
+BENCH_query.json is caught without re-publishing benchmark numbers.
 """
 from __future__ import annotations
 
@@ -38,17 +42,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import E2LSHoS
-from repro.core.query import (query_batch, query_batch_adaptive_host,
-                              query_batch_fused)
+from repro.core import E2LSHoS, SearchEngine
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
-ENGINES = {
-    "host": query_batch_adaptive_host,
-    "oracle": query_batch,
-    "fused": query_batch_fused,
-}
+PLANS = ("host", "oracle", "fused")
 
 # (n, d, Q, max_L, s_cap, n_hard_queries, scale): `scale` stretches the data
 # range, deepening the radius schedule; hard queries are far outliers that
@@ -59,6 +57,13 @@ WORKLOADS = {
     "throughput": dict(n=12000, d=24, queries=64, max_L=24, s_cap=None,
                        hard=0, scale=1.0),
 }
+
+# every per-plan stat block and top-level key the trajectory tooling reads;
+# --smoke asserts these exact names so schema drift fails CI
+PLAN_STAT_KEYS = ("qps", "p50_dispatch_ms", "mean_dispatch_ms",
+                  "min_dispatch_ms", "nio_mean", "radii_mean")
+PAYLOAD_KEYS = ("backend", "repeats", "seed", "workloads",
+                "speedup_fused_vs_host", "parity")
 
 
 def make_workload(spec: dict, seed: int):
@@ -76,16 +81,16 @@ def make_workload(spec: dict, seed: int):
     return db / s, qs / s
 
 
-def bench_engine(name: str, idx: E2LSHoS, queries, cfg, *, repeats: int):
-    fn = ENGINES[name]
-    arrays = idx.fused_arrays(cfg.block_objs) if name == "fused" else idx.arrays()
+def bench_plan(engine: SearchEngine, plan: str, queries, *, k: int,
+               s_cap, repeats: int):
+    cfg, fn = engine.make_plan_fn(plan=plan, k=k, s_cap=s_cap)
     queries = jnp.asarray(queries)
-    res = fn(arrays, queries, cfg)          # compile + warm caches
+    res = fn(queries)                       # compile + warm caches
     jax.block_until_ready(res.ids)
     times = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        res = fn(arrays, queries, cfg)
+        res = fn(queries)
         jax.block_until_ready(res.ids)
         times.append(time.perf_counter() - t0)
     med = statistics.median(times)
@@ -96,25 +101,27 @@ def bench_engine(name: str, idx: E2LSHoS, queries, cfg, *, repeats: int):
         min_dispatch_ms=min(times) * 1e3,
         nio_mean=float(np.mean(np.asarray(res.nio))),
         radii_mean=float(np.mean(np.asarray(res.radii_searched))),
-    ), res
+    ), res, cfg
 
 
 def run_workload(wname: str, spec: dict, *, k: int, repeats: int, seed: int):
     db, queries = make_workload(spec, seed)
     idx = E2LSHoS.build(db, gamma=0.7, s_scale=2.0, max_L=spec["max_L"],
                         seed=seed)
-    cfg = idx.query_config(k=k, s_cap=spec["s_cap"])
-    out = dict(params=dict(n=spec["n"], d=spec["d"], queries=spec["queries"],
-                           k=k, radii=list(idx.params.radii), L=idx.params.L,
-                           S=cfg.S, max_chain=cfg.max_chain))
+    engine = SearchEngine(idx)
     results = {}
-    for name in ("host", "oracle", "fused"):
-        stats, res = bench_engine(name, idx, queries, cfg, repeats=repeats)
+    out = {}
+    for name in PLANS:
+        stats, res, cfg = bench_plan(engine, name, queries, k=k,
+                                     s_cap=spec["s_cap"], repeats=repeats)
         out[name] = stats
         results[name] = res
         print(f"[{wname:10s}/{name:6s}] {stats['qps']:9.0f} q/s  "
               f"p50 {stats['p50_dispatch_ms']:7.2f} ms/batch  "
               f"nio {stats['nio_mean']:.0f}  radii {stats['radii_mean']:.2f}")
+    out["params"] = dict(n=spec["n"], d=spec["d"], queries=spec["queries"],
+                         k=k, radii=list(idx.params.radii), L=idx.params.L,
+                         S=cfg.S, max_chain=cfg.max_chain)
     # parity contract (docs/query_engine.md): oracle <-> fused are bit-exact;
     # the host path's per-radius jit programs carry ulp-level float noise, so
     # near-tied ids may swap — hold it to the test suite's tolerant contract.
@@ -132,13 +139,33 @@ def run_workload(wname: str, spec: dict, *, k: int, repeats: int, seed: int):
     return out
 
 
+def check_schema(payload: dict):
+    """Assert the BENCH_query.json shape the trajectory tooling depends on."""
+    for key in PAYLOAD_KEYS:
+        assert key in payload, f"missing top-level key {key!r}"
+    for wname in WORKLOADS:
+        wl = payload["workloads"][wname]
+        for plan in PLANS:
+            for key in PLAN_STAT_KEYS:
+                assert key in wl[plan], f"missing {wname}/{plan}/{key}"
+        assert "params" in wl and "speedup_fused_vs_host" in wl
+    assert payload["speedup_fused_vs_host"] > 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--k", type=int, default=1)
     ap.add_argument("--repeats", type=int, default=40)
     ap.add_argument("--seed", type=int, default=1)
-    ap.add_argument("--out", default=str(ROOT / "BENCH_query.json"))
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="2-repeat schema-validation pass; writes to a "
+                         "scratch file instead of BENCH_query.json")
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.repeats = min(args.repeats, 2)
+    out_path = args.out or str(
+        ROOT / ("BENCH_query.smoke.json" if args.smoke else "BENCH_query.json"))
 
     workloads = {name: run_workload(name, spec, k=args.k, repeats=args.repeats,
                                     seed=args.seed)
@@ -155,9 +182,11 @@ def main(argv=None):
         parity="oracle<->fused ids bit-identical; host held to the tolerant "
                "cross-jit contract (asserted on both workloads)",
     )
-    pathlib.Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
-    print(f"headline: fused {speedup:.2f}x over pre-refactor host path; "
-          f"wrote {args.out}")
+    check_schema(payload)
+    pathlib.Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
+    tag = "smoke: schema OK; " if args.smoke else ""
+    print(f"{tag}headline: fused {speedup:.2f}x over pre-refactor host path; "
+          f"wrote {out_path}")
     return payload
 
 

@@ -6,10 +6,13 @@ from .probabilities import (
     rho,
     solve_params,
 )
-from .hashing import HashFamily, make_hash_family, hash_points_radius
-from .index import E2LSHIndex, IndexStats, build_index
-from .query import (QueryConfig, QueryResult, ensure_fused_arrays, make_query_fn,
-                    query_batch, query_batch_adaptive, query_batch_adaptive_host,
+from .hashing import (HashFamily, make_hash_family, hash_points_radius,
+                      hash_points_radius_deterministic)
+from .index import E2LSHIndex, IndexArrays, IndexStats, build_index
+from .query import (QueryConfig, QueryResult, SearchEngine,
+                    # deprecated wrappers (one-PR migration shims)
+                    ensure_fused_arrays, make_query_fn, query_batch,
+                    query_batch_adaptive, query_batch_adaptive_host,
                     query_batch_fused)
 from .e2lshos import E2LSHoS, measured_query
 from .tuning import overall_ratio, tune_gamma
@@ -18,8 +21,10 @@ from . import io_count, storage
 __all__ = [
     "LSHParams", "collision_probability", "radii_schedule", "rho", "solve_params",
     "HashFamily", "make_hash_family", "hash_points_radius",
-    "E2LSHIndex", "IndexStats", "build_index",
-    "QueryConfig", "QueryResult", "query_batch", "query_batch_fused",
+    "hash_points_radius_deterministic",
+    "E2LSHIndex", "IndexArrays", "IndexStats", "build_index",
+    "QueryConfig", "QueryResult", "SearchEngine",
+    "query_batch", "query_batch_fused",
     "query_batch_adaptive", "query_batch_adaptive_host", "ensure_fused_arrays",
     "make_query_fn",
     "E2LSHoS", "measured_query", "overall_ratio", "tune_gamma",

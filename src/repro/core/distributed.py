@@ -7,6 +7,14 @@ bucket/table structure under a SHARED hash family, and a query probes all
 shards in parallel (shard_map), merging local top-k via an all-gather over the
 index axes — the collective analogue of the paper's multi-drive aggregation.
 
+The per-shard index is the same typed `IndexArrays` pytree the single-device
+engine consumes, stacked along a leading shard dim (hash family replicated),
+with per-shard BLOCKIFIED stores padded to a common row count — so the
+sharded plan dispatches the SAME fused one-dispatch early-exit body per
+device inside shard_map (`SearchEngine(sharded, mesh=...).query(qs,
+plan="sharded")`), and `plan="oracle"` runs the per-shard unrolled reference
+through the identical merge for bit-exact parity.
+
 Two parallelism axes compose (mesh axes are configurable):
   * index parallelism  — shards of the database/index (paper: more drives);
   * query parallelism  — batch sharding (paper: multi-threading, Fig. 16).
@@ -20,40 +28,60 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
+import warnings
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from .compat import shard_map
 from .hashing import make_hash_family
-from .index import build_index
+from .index import IndexArrays, build_index
 from .probabilities import LSHParams, solve_params
-from .query import QueryConfig, query_batch
+from .query import QueryConfig, QueryResult, fused_plan_body, oracle_plan_body
 
-__all__ = ["ShardedIndexArrays", "build_sharded_index", "sharded_query", "make_sharded_query_fn"]
+__all__ = ["ShardedIndexArrays", "build_sharded_index", "sharded_query_result",
+           "sharded_query", "make_sharded_query_fn"]
 
 _INVALID = np.int32(2**31 - 1)
 
 
 @dataclasses.dataclass
 class ShardedIndexArrays:
-    """Stacked per-shard arrays; leading dim = shard."""
+    """Typed per-shard index pytree; non-replicated leaves carry a leading
+    shard dim (hash family a/b/rm stays replicated — shared across shards)."""
 
-    arrays: dict              # each [SH, ...]
+    arrays: IndexArrays       # stacked: [SH, ...] except IndexArrays.REPLICATED
     shard_offsets: jnp.ndarray  # [SH] global id base per shard
     params: LSHParams
     num_shards: int
 
-    def spec_tree(self, index_axes) -> dict:
-        """PartitionSpecs: shard dim over `index_axes`, rest replicated."""
-        specs = {}
-        for k, v in self.arrays.items():
-            specs[k] = P(index_axes, *([None] * (v.ndim - 1)))
-        return specs
+    def specs(self, index_axes) -> IndexArrays:
+        """PartitionSpec pytree matching `arrays`: shard dim over
+        `index_axes`, hash family replicated."""
+        index_axes = tuple(index_axes)
+
+        def spec(name: str, v) -> P:
+            if name in IndexArrays.REPLICATED:
+                return P(*([None] * np.ndim(v)))
+            return P(index_axes, *([None] * (np.ndim(v) - 1)))
+
+        return IndexArrays(
+            **{name: spec(name, getattr(self.arrays, name))
+               for name in IndexArrays.array_fields()},
+            block_objs=self.arrays.block_objs,
+            lane_pad=self.arrays.lane_pad,
+        )
+
+
+def _pad_rows(x: np.ndarray, rows: int, fill) -> np.ndarray:
+    pad = rows - x.shape[0]
+    if pad == 0:
+        return x
+    widths = ((0, pad),) + tuple((0, 0) for _ in x.shape[1:])
+    return np.pad(x, widths, constant_values=fill)
 
 
 def build_sharded_index(
@@ -69,7 +97,11 @@ def build_sharded_index(
     u_bits: Optional[int] = None,
 ) -> ShardedIndexArrays:
     """Range-partition `db` and build one sub-index per shard under a shared
-    hash family. Entry arrays are padded to the max shard length."""
+    hash family. Every shard's `IndexArrays` is emitted natively blockified
+    by `build_index`; entry arrays, block stores, and the db tier are padded
+    to the max shard extent so the stacked pytree is rectangular (padding is
+    masked: pad entries sit behind table_cnt, pad block rows behind
+    blocks_head, pad db rows behind the entry ids)."""
     db = np.asarray(db)
     n, d = db.shape
     bounds = np.linspace(0, n, num_shards + 1).astype(np.int64)
@@ -94,26 +126,28 @@ def build_sharded_index(
         lo, hi = int(bounds[s]), int(bounds[s + 1])
         shard_db = db[lo:hi]
         sp = dataclasses.replace(params, n=hi - lo)
-        per_shard.append(build_index(shard_db, sp, family=family))
+        per_shard.append(build_index(shard_db, sp, family=family).arrays)
 
     E_max = max(int(ix.entries_id.shape[0]) for ix in per_shard)
-    def pad_entries(x, fill):
-        pad = E_max - x.shape[0]
-        return np.pad(np.asarray(x), (0, pad), constant_values=fill)
+    NB_max = max(int(ix.ids_blocks.shape[0]) for ix in per_shard)
+    fills = dict(entries_id=0, entries_fp=0, ids_blocks=int(_INVALID),
+                 fps_blocks=-1, db=0, db_norm2=0)
+    rows = dict(entries_id=E_max, entries_fp=E_max, ids_blocks=NB_max,
+                fps_blocks=NB_max, db=n_shard_max, db_norm2=n_shard_max)
 
-    def pad_db(x):
-        pad = n_shard_max - x.shape[0]
-        return np.pad(np.asarray(x), ((0, pad), (0, 0)))
+    def stack(name: str):
+        parts = [np.asarray(getattr(ix, name)) for ix in per_shard]
+        if name in rows:
+            parts = [_pad_rows(p, rows[name], fills[name]) for p in parts]
+        return jnp.asarray(np.stack(parts))
 
-    arrays = dict(
-        a=family.a, b=family.b, rm=family.rm,  # replicated (no shard dim stacking)
-        table_off=jnp.stack([ix.table_off for ix in per_shard]),
-        table_cnt=jnp.stack([ix.table_cnt for ix in per_shard]),
-        entries_id=jnp.stack([jnp.asarray(pad_entries(ix.entries_id, 0)) for ix in per_shard]),
-        entries_fp=jnp.stack([jnp.asarray(pad_entries(ix.entries_fp, 0)) for ix in per_shard]),
-        db=jnp.stack([jnp.asarray(pad_db(ix.db)) for ix in per_shard]),
+    arrays = IndexArrays(
+        a=family.a, b=family.b, rm=family.rm,  # replicated (no shard dim)
+        **{name: stack(name) for name in IndexArrays.array_fields()
+           if name not in IndexArrays.REPLICATED},
+        block_objs=per_shard[0].block_objs,
+        lane_pad=per_shard[0].lane_pad,
     )
-    arrays["db_norm2"] = jnp.sum(arrays["db"].astype(jnp.float32) ** 2, axis=-1)
     return ShardedIndexArrays(
         arrays=arrays,
         shard_offsets=jnp.asarray(bounds[:-1].astype(np.int32)),
@@ -122,10 +156,27 @@ def build_sharded_index(
     )
 
 
-def _local_shard_query(local_arrays, shard_off, queries, cfg: QueryConfig,
-                       index_axes: tuple, k: int):
-    """Runs inside shard_map: local probe + cross-shard top-k merge."""
-    res = query_batch(local_arrays, queries, cfg)
+def _local_view(ix: IndexArrays) -> IndexArrays:
+    """Drop the (size-1) local shard dim shard_map leaves on stacked fields."""
+    return IndexArrays(
+        **{name: (getattr(ix, name) if name in IndexArrays.REPLICATED
+                  else getattr(ix, name)[0])
+           for name in IndexArrays.array_fields()},
+        block_objs=ix.block_objs, lane_pad=ix.lane_pad,
+    )
+
+
+def _local_shard_query(local: IndexArrays, shard_off, queries,
+                       cfg: QueryConfig, index_axes: tuple, k: int,
+                       local_plan: str):
+    """Runs inside shard_map: local plan body + cross-shard top-k merge.
+
+    `local_plan="fused"` dispatches the production single-dispatch engine on
+    the shard's blockified store; `"oracle"` runs the unrolled CSR reference
+    through the identical merge (the sharded parity target).
+    """
+    body = fused_plan_body if local_plan == "fused" else oracle_plan_body
+    res = body(local, queries, cfg)
     ids = jnp.where(res.ids == jnp.int32(_INVALID), jnp.int32(_INVALID),
                     res.ids + shard_off)
     d2 = jnp.where(jnp.isinf(res.dists), jnp.inf, res.dists ** 2)
@@ -144,11 +195,69 @@ def _local_shard_query(local_arrays, shard_off, queries, cfg: QueryConfig,
         all_ids = jnp.take_along_axis(all_ids, order, axis=1)
         all_d2 = jnp.take_along_axis(all_d2, order, axis=1)
         ids, d2 = all_ids, all_d2
-    # aggregate I/O stats across shards (paper Fig. 15: total observed IOPS)
-    nio = res.nio.astype(jnp.int32)
+    # aggregate stats across shards (paper Fig. 15: total observed IOPS);
+    # `found` is any-shard success, `radii_searched` the deepest schedule
+    # any shard walked for the query
+    nio_t, nio_b, cands = (res.nio_table, res.nio_blocks, res.cands_checked)
+    found = res.found.astype(jnp.int32)
+    radii = res.radii_searched
     for ax in index_axes:
-        nio = jax.lax.psum(nio, ax)
-    return ids, jnp.sqrt(all_d2), nio, res.found
+        nio_t = jax.lax.psum(nio_t, ax)
+        nio_b = jax.lax.psum(nio_b, ax)
+        cands = jax.lax.psum(cands, ax)
+        found = jax.lax.pmax(found, ax)
+        radii = jax.lax.pmax(radii, ax)
+    return (ids, jnp.sqrt(all_d2), found > 0, radii, nio_t, nio_b, cands)
+
+
+def sharded_query_result(
+    sharded: ShardedIndexArrays,
+    queries: jnp.ndarray,
+    mesh: Mesh,
+    *,
+    k: int = 1,
+    index_axes: Sequence[str] = ("shard",),
+    query_axes: Sequence[str] = (),
+    s_cap: Optional[int] = None,
+    s_cap_per_shard: Optional[int] = None,
+    local_plan: str = "fused",
+) -> QueryResult:
+    """shard_map query over `mesh`, returning a full merged `QueryResult`.
+
+    Index over `index_axes`, query batch over `query_axes`. This is the
+    execution body behind ``SearchEngine(sharded, mesh=...).query(qs,
+    plan="sharded"|"oracle")``; `probe_sizes` is not collected under
+    shard_map.
+    """
+    if local_plan not in ("fused", "oracle"):
+        raise ValueError(f"unknown local_plan {local_plan!r}")
+    p = sharded.params
+    sh = 1
+    index_axes = tuple(index_axes)
+    query_axes = tuple(query_axes)
+    for ax in index_axes:
+        sh *= mesh.shape[ax]
+    assert sh == sharded.num_shards, (sh, sharded.num_shards)
+    base_S = int(s_cap or p.S)
+    cap = s_cap_per_shard or max(4 * k, -(-base_S // sharded.num_shards))
+    cfg = QueryConfig.from_params(p, k=k).replace(s_cap=int(cap))
+
+    qspec = P(query_axes if query_axes else None)
+    in_specs = (sharded.specs(index_axes), P(index_axes), qspec)
+    out_specs = (qspec,) * 7
+
+    def body(ix, shard_off, qs):
+        return _local_shard_query(_local_view(ix), shard_off[0], qs, cfg,
+                                  index_axes, k, local_plan)
+
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    ids, dists, found, radii, nio_t, nio_b, cands = fn(
+        sharded.arrays, sharded.shard_offsets, queries.astype(jnp.float32))
+    return QueryResult(
+        ids=ids, dists=dists, found=found, radii_searched=radii,
+        nio_table=nio_t, nio_blocks=nio_b, cands_checked=cands,
+        probe_sizes=None,
+    )
 
 
 def sharded_query(
@@ -161,45 +270,23 @@ def sharded_query(
     query_axes: Sequence[str] = (),
     s_cap_per_shard: Optional[int] = None,
 ):
-    """shard_map query over `mesh`. Index over `index_axes`, query batch over
-    `query_axes`. Returns (ids [Q, k], dists [Q, k], nio [Q], found [Q])."""
-    p = sharded.params
-    sh = 1
-    for ax in index_axes:
-        sh *= mesh.shape[ax]
-    assert sh == sharded.num_shards, (sh, sharded.num_shards)
-    s_cap = s_cap_per_shard or max(4 * k, -(-p.S // sharded.num_shards))
-    cfg = QueryConfig.from_params(p, k=k).replace(s_cap=int(s_cap))
-
-    index_axes = tuple(index_axes)
-    query_axes = tuple(query_axes)
-    in_specs = (
-        {k_: (P(index_axes, *([None] * (v.ndim - 1))) if k_ not in ("a", "b", "rm")
-              else P(*([None] * v.ndim)))
-         for k_, v in sharded.arrays.items()},
-        P(index_axes),                       # shard offsets
-        P(query_axes if query_axes else None),  # queries
-    )
-    out_specs = (
-        P(query_axes if query_axes else None),
-        P(query_axes if query_axes else None),
-        P(query_axes if query_axes else None),
-        P(query_axes if query_axes else None),
-    )
-
-    def body(arrays, shard_off, qs):
-        local = {k_: (v[0] if k_ not in ("a", "b", "rm") else v)
-                 for k_, v in arrays.items()}
-        return _local_shard_query(local, shard_off[0], qs, cfg, index_axes, k)
-
-    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
-    return fn(sharded.arrays, sharded.shard_offsets, queries.astype(jnp.float32))
+    """DEPRECATED tuple-returning wrapper; use
+    ``SearchEngine(sharded, mesh=...).query(qs, plan="sharded")`` (or
+    `sharded_query_result` directly). Returns (ids, dists, nio, found)."""
+    warnings.warn("sharded_query is deprecated; use SearchEngine(sharded, "
+                  "mesh=...).query(qs, plan=\"sharded\") — it returns a full "
+                  "QueryResult", DeprecationWarning, stacklevel=2)
+    res = sharded_query_result(
+        sharded, queries, mesh, k=k, index_axes=index_axes,
+        query_axes=query_axes, s_cap_per_shard=s_cap_per_shard)
+    return res.ids, res.dists, res.nio, res.found
 
 
 def make_sharded_query_fn(sharded: ShardedIndexArrays, mesh: Mesh, **kw):
-    """jit-wrapped sharded query (for benchmarking / serving)."""
+    """jit-wrapped sharded query (for benchmarking / serving); returns a
+    merged `QueryResult`."""
     @jax.jit
     def fn(arrays, shard_offsets, queries):
         tmp = dataclasses.replace(sharded, arrays=arrays, shard_offsets=shard_offsets)
-        return sharded_query(tmp, queries, mesh, **kw)
+        return sharded_query_result(tmp, queries, mesh, **kw)
     return fn

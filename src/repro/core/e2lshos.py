@@ -11,21 +11,24 @@ Modes
 The *executable* data structures are identical (this container has one memory
 tier); what differs is the accounting and the modeled query time, exactly as
 in the paper's Sec. 4 analysis framework.
+
+Querying delegates to ``core.query.SearchEngine`` — ``E2LSHoS.query(qs,
+plan=...)`` is sugar over ``SearchEngine(self).query(qs, plan=...)``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .index import E2LSHIndex, build_index
+from .index import E2LSHIndex, IndexArrays, build_index
 from .probabilities import LSHParams, solve_params
-from .query import (QueryConfig, QueryResult, ensure_fused_arrays, query_batch,
-                    query_batch_adaptive_host, query_batch_fused)
+from .query import QueryConfig, QueryResult, SearchEngine
 from . import storage as storage_mod
 
 __all__ = ["E2LSHoS", "MemoryFootprint", "measured_query"]
@@ -57,7 +60,7 @@ class E2LSHoS:
         assert tier in ("storage", "memory")
         self.index = index
         self.tier = tier
-        self._arrays = None
+        self._engine: Optional[SearchEngine] = None
 
     # -- construction ------------------------------------------------------
     @staticmethod
@@ -92,57 +95,61 @@ class E2LSHoS:
     def params(self) -> LSHParams:
         return self.index.params
 
+    @property
+    def engine(self) -> SearchEngine:
+        """The pluggable-plan query engine over this index."""
+        if self._engine is None:
+            self._engine = SearchEngine(self.index)
+        return self._engine
+
+    def index_arrays(self, block_objs: Optional[int] = None) -> IndexArrays:
+        """The typed index pytree (natively blockified; re-blockified and
+        memoized when the `block_objs` timing knob differs)."""
+        return self.engine.arrays(block_objs)
+
     def arrays(self) -> dict:
-        if self._arrays is None:
-            arr = self.index.as_arrays()
-            arr["db_norm2"] = jnp.sum(arr["db"].astype(jnp.float32) ** 2, axis=-1)
-            self._arrays = arr
-        return self._arrays
+        """DEPRECATED flat-dict view; use ``index_arrays()``."""
+        warnings.warn("E2LSHoS.arrays() is deprecated; use the typed "
+                      "E2LSHoS.index_arrays()", DeprecationWarning,
+                      stacklevel=2)
+        return self.index_arrays().as_dict()
 
     def fused_arrays(self, block_objs: Optional[int] = None) -> dict:
-        """Arrays + the blockified block-store layout the fused engine reads.
-        ensure_fused_arrays memoizes per block size on the arrays dict itself,
-        so the timing knob re-blockifies once."""
-        bo = int(block_objs or self.params.block_objs)
-        return ensure_fused_arrays(self.arrays(), bo)
+        """DEPRECATED: the build emits the blockified layout natively; use
+        ``index_arrays(block_objs)``."""
+        warnings.warn("E2LSHoS.fused_arrays() is deprecated; build_index "
+                      "emits blockified IndexArrays natively — use "
+                      "E2LSHoS.index_arrays(block_objs)", DeprecationWarning,
+                      stacklevel=2)
+        return self.index_arrays(block_objs).as_dict()
 
     # -- querying ----------------------------------------------------------
     def query_config(self, *, k: int = 1, collect_probe_sizes: bool = False,
                      s_cap: Optional[int] = None, max_chain: int = 0,
                      block_objs: Optional[int] = None) -> QueryConfig:
-        cfg = QueryConfig.from_params(
-            self.params, k=k, max_chain=max_chain,
-            collect_probe_sizes=collect_probe_sizes,
-        )
-        # narrower gather chunks (timing knob): identical candidates and
-        # results; storage-block I/O accounting is replayed separately at
-        # the paper's 512 B granularity (io_count)
-        return cfg.replace(s_cap=s_cap, block_objs=block_objs)
+        return self.engine.config(
+            k=k, collect_probe_sizes=collect_probe_sizes, s_cap=s_cap,
+            max_chain=max_chain, block_objs=block_objs)
 
     def query(self, queries, *, k: int = 1, adaptive: bool = True,
-              engine: Optional[str] = None,
+              plan: Optional[str] = None, engine: Optional[str] = None,
               collect_probe_sizes: bool = False, s_cap: Optional[int] = None,
               block_objs: Optional[int] = None) -> QueryResult:
-        """Run a query batch.
+        """Run a query batch through the SearchEngine.
 
-        engine: "fused" (single-dispatch while_loop engine), "oracle"
-        (unrolled reference), or "host" (pre-fusion per-radius host loop, kept
-        for benchmarking). Default: fused when `adaptive` else oracle.
+        plan: "fused" (single-dispatch while_loop engine), "oracle"
+        (unrolled reference), or "host" (pre-fusion per-radius host loop,
+        kept for benchmarking). Default: fused when `adaptive` else oracle.
         """
-        cfg = self.query_config(k=k, collect_probe_sizes=collect_probe_sizes,
-                                s_cap=s_cap, block_objs=block_objs)
-        if engine is None:
-            engine = "fused" if adaptive else "oracle"
-        queries = jnp.asarray(queries)
-        if engine == "fused":
-            return query_batch_fused(self.fused_arrays(cfg.block_objs),
-                                     queries, cfg)
-        if engine == "host":
-            return query_batch_adaptive_host(self.arrays(), queries, cfg)
-        if engine != "oracle":
-            raise ValueError(f"unknown engine {engine!r}; "
-                             "expected 'fused', 'oracle', or 'host'")
-        return query_batch(self.arrays(), queries, cfg)
+        if engine is not None:
+            warnings.warn("E2LSHoS.query(engine=...) is deprecated; use "
+                          "plan=...", DeprecationWarning, stacklevel=2)
+            plan = plan or engine
+        if plan is None:
+            plan = "fused" if adaptive else "oracle"
+        return self.engine.query(
+            queries, plan=plan, k=k, collect_probe_sizes=collect_probe_sizes,
+            s_cap=s_cap, block_objs=block_objs)
 
     # -- accounting (Table 6) ----------------------------------------------
     def footprint(self) -> MemoryFootprint:
@@ -174,16 +181,21 @@ class E2LSHoS:
 def measured_query(idx: E2LSHoS, queries, *, k: int = 1, repeats: int = 3,
                    collect_probe_sizes: bool = False,
                    block_objs: Optional[int] = None,
+                   plan: Optional[str] = None,
                    engine: Optional[str] = None) -> MeasuredQuery:
-    """Run the adaptive query and measure wall time per query on this host.
+    """Run a query plan and measure wall time per query on this host.
 
-    The first call includes compile; we time subsequent repeats. `engine`
+    The first call includes compile; we time subsequent repeats. `plan`
     selects the dispatch path (None -> fused; "host" re-measures the
     pre-fusion per-radius loop for comparison).
     """
+    if engine is not None:
+        warnings.warn("measured_query(engine=...) is deprecated; use plan=...",
+                      DeprecationWarning, stacklevel=2)
+        plan = plan or engine
     queries = jnp.asarray(queries)
     kw = dict(k=k, collect_probe_sizes=collect_probe_sizes,
-              block_objs=block_objs, engine=engine)
+              block_objs=block_objs, plan=plan)
     res = idx.query(queries, **kw)
     jax.block_until_ready(res.ids)
     t0 = time.perf_counter()

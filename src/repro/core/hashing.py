@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["HashFamily", "make_hash_family", "hash_points", "hash_points_radius", "fmix32"]
+__all__ = ["HashFamily", "make_hash_family", "hash_points", "hash_points_radius",
+           "hash_points_radius_deterministic", "fmix32"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,6 +144,23 @@ def hash_points(family: HashFamily, x: jnp.ndarray, radii) -> tuple:
     return jnp.stack(buckets), jnp.stack(fps)
 
 
+def _fmix32_np(h: np.ndarray) -> np.ndarray:
+    """NumPy twin of `fmix32` (exact integer pipeline, no float involved)."""
+    h = h.astype(np.uint32)
+    h = h ^ (h >> np.uint32(16))
+    h = (h * np.uint32(0x85EBCA6B)).astype(np.uint32)
+    h = h ^ (h >> np.uint32(13))
+    h = (h * np.uint32(0xC2B2AE35)).astype(np.uint32)
+    h = h ^ (h >> np.uint32(16))
+    return h
+
+
+def _split_bucket_fp_np(h: np.ndarray, u: int, fp_bits: int):
+    bucket = (h & np.uint32((1 << u) - 1)).astype(np.int32)
+    fp = ((h >> np.uint32(u)) & np.uint32((1 << fp_bits) - 1)).astype(np.uint32)
+    return bucket, fp
+
+
 def hash_points_radius_np(family_np: dict, x: np.ndarray, t: int, radius: float, u: int, fp_bits: int):
     """NumPy oracle of the hash pipeline (used by tests and ref kernels)."""
     a = np.asarray(family_np["a"][t], dtype=np.float32)     # [L, m, d]
@@ -152,12 +170,34 @@ def hash_points_radius_np(family_np: dict, x: np.ndarray, t: int, radius: float,
     proj = np.einsum("nd,lmd->nlm", x.astype(np.float32), a).astype(np.float32)
     hj = np.floor((proj + b[None] * wr) / wr).astype(np.int32)
     acc = (hj.astype(np.uint32) * rm[None]).sum(axis=-1, dtype=np.uint32)
-    h = acc
-    h ^= h >> np.uint32(16)
-    h = (h * np.uint32(0x85EBCA6B)).astype(np.uint32)
-    h ^= h >> np.uint32(13)
-    h = (h * np.uint32(0xC2B2AE35)).astype(np.uint32)
-    h ^= h >> np.uint32(16)
-    bucket = (h & np.uint32((1 << u) - 1)).astype(np.int32)
-    fp = ((h >> np.uint32(u)) & np.uint32((1 << fp_bits) - 1)).astype(np.uint32)
-    return bucket, fp
+    return _split_bucket_fp_np(_fmix32_np(acc), u, fp_bits)
+
+
+def hash_points_radius_deterministic(family: HashFamily, x: np.ndarray,
+                                     t: int, radius: float):
+    """Deterministic BUILD-path hashing: float64-accumulated projections.
+
+    The device einsum's GEMM may split its reduction dimension across a
+    thread-count-dependent number of partial sums, so float32 projections
+    near a floor() boundary can quantize differently between processes —
+    the known nondeterministic-index-build bug. Accumulating in float64
+    shrinks order-dependent rounding noise to ~1e-14 relative, far below
+    any realizable boundary gap, and everything after the floor() is exact
+    integer math — so index builds are reproducible across hosts, thread
+    counts, and BLAS backends.
+
+    Query-time hashing stays on the float32 device path (the LSH guarantee
+    needs hash functions that agree statistically, not bitwise; a build/query
+    quantization flip at one (t, l) costs one of L independent probes).
+
+    Returns numpy (bucket [N, L] int32, fp [N, L] uint32).
+    """
+    a = np.asarray(family.a)[t].astype(np.float64)     # [L, m, d]
+    b = np.asarray(family.b)[t].astype(np.float64)     # [L, m]
+    rm = np.asarray(family.rm)[t].astype(np.uint32)    # [L, m]
+    L, m, d = a.shape
+    wr = np.float64(family.w) * np.float64(radius)
+    proj = np.asarray(x, np.float64) @ a.reshape(L * m, d).T   # [N, L*m]
+    hj = np.floor((proj.reshape(-1, L, m) + b[None] * wr) / wr).astype(np.int32)
+    acc = (hj.astype(np.uint32) * rm[None]).sum(axis=-1, dtype=np.uint32)
+    return _split_bucket_fp_np(_fmix32_np(acc), family.u, family.fp_bits)

@@ -7,22 +7,23 @@ Storage-tier layout (per paper Sec. 5.1/5.3):
     99 x 5 B infos), chained until the bucket is exhausted;
   * object info = object id + fingerprint (paper Sec. 5.2).
 
-TPU adaptation (recorded in DESIGN.md): chains are laid out *contiguously* in
-one entries array, so "block j of bucket" is an offset computation instead of
-pointer chasing. Build-time allocators produce exactly this layout anyway
+The index's NATIVE representation is the typed `IndexArrays` pytree, emitted
+by `build_index` directly in the blockified block-store layout the fused
+query engine reads ([NB, BLKp] block rows + per-bucket head rows): the
+paper's 512 B blocks ARE the on-device data structure, not a view derived at
+query setup. The flat CSR arrays (`table_off`/`table_cnt` over contiguous
+`entries_*`) ride along as the DERIVED view consumed by the unrolled oracle
+and the io-count replay paths — both layouts hold exactly the same entries
+in the same chunk order, which is what makes the engines bit-identical.
+
+TPU adaptation (recorded in DESIGN.md): chains are laid out *contiguously*
+(block j of a bucket is row `head + j`), so pointer chasing becomes an offset
+computation. Build-time allocators produce exactly this layout anyway
 (buckets are written whole), the per-block I/O accounting is unchanged (one
 read per `block_objs` chunk + one read per hash-table lookup), and contiguous
 chains remove the serial read dependency of a linked list — a strictly better
 analogue of the paper's "issue many reads in parallel" design on TPU, where
 gathers are batched.
-
-Arrays (the "storage tier"; `db` is the paper's DRAM tier):
-  table_off [r, L, 2^u] int32   global entry offset of bucket head (-1 empty)
-  table_cnt [r, L, 2^u] int32   bucket size (number of object infos)
-  entries_id [E] int32          object ids, grouped by (t, l, bucket)
-  entries_fp [E] uint16         fingerprints (low `fp_bits` bits valid)
-  db [n, d] float32             object coordinates (DRAM tier)
-with E = n * L * r exactly (every object lands in one bucket per (t, l)).
 """
 from __future__ import annotations
 
@@ -34,10 +35,160 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .hashing import HashFamily, hash_points_radius, make_hash_family
+from .hashing import (HashFamily, hash_points_radius,
+                      hash_points_radius_deterministic, make_hash_family)
 from .probabilities import LSHParams
+from ..kernels.bucket_probe.ops import blockify_entries
+from ..kernels.dispatch import native_lane_pad
 
-__all__ = ["E2LSHIndex", "build_index", "IndexStats"]
+__all__ = ["IndexArrays", "E2LSHIndex", "build_index", "IndexStats"]
+
+def _static():
+    return dataclasses.field(metadata=dict(static=True))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class IndexArrays:
+    """The typed index pytree — ONE object that crosses every jit/shard_map
+    boundary (replaces the untyped ``arrays: dict`` of the seed API).
+
+    Array leaves flatten as pytree data; ``block_objs``/``lane_pad`` are
+    static metadata (part of the treedef, hence of jit cache keys), so a
+    re-blockified index is a *different* pytree type and can never silently
+    hit a stale compiled program.
+
+    Layout groups:
+      hash family      a [r, L, m, d] f32, b/rm [r, L, m]
+      block store      ids_blocks/fps_blocks [NB, BLKp] i32 (native layout;
+                       row 0 is a guaranteed-empty spare used as safe
+                       padding), blocks_head [r, L, 2^u] i32 (-1 empty)
+      CSR derived view table_off/table_cnt [r, L, 2^u] i32 over
+                       entries_id [E] i32 / entries_fp [E] u16
+      DRAM tier        db [n, d] f32, db_norm2 [n] f32
+    """
+
+    a: jnp.ndarray
+    b: jnp.ndarray
+    rm: jnp.ndarray
+    ids_blocks: jnp.ndarray
+    fps_blocks: jnp.ndarray
+    blocks_head: jnp.ndarray
+    table_off: jnp.ndarray
+    table_cnt: jnp.ndarray
+    entries_id: jnp.ndarray
+    entries_fp: jnp.ndarray
+    db: jnp.ndarray
+    db_norm2: jnp.ndarray
+    block_objs: int = _static()
+    lane_pad: int = _static()
+
+    # field-name groups (used by distributed stacking/spec construction)
+    REPLICATED = ("a", "b", "rm")
+
+    @staticmethod
+    def array_fields() -> tuple:
+        return tuple(f.name for f in dataclasses.fields(IndexArrays)
+                     if f.name not in ("block_objs", "lane_pad"))
+
+    @staticmethod
+    def from_csr(*, a, b, rm, table_off, table_cnt, entries_id, entries_fp,
+                 db, block_objs: int, lane_pad: Optional[int] = None,
+                 db_norm2=None) -> "IndexArrays":
+        """Blockify a CSR layout into the native block-store representation.
+
+        This is the one conversion path in core; `build_index` calls it with
+        the freshly packed numpy CSR so the device arrays are born
+        blockified.
+        """
+        lp = native_lane_pad() if lane_pad is None else int(lane_pad)
+        ids_b, fps_b, head, _ = blockify_entries(
+            np.asarray(entries_id), np.asarray(entries_fp),
+            np.asarray(table_off), np.asarray(table_cnt),
+            int(block_objs), lane_pad=lp,
+        )
+        if db_norm2 is None:
+            db_norm2 = np.sum(np.asarray(db, np.float32) ** 2, axis=-1,
+                              dtype=np.float32)
+        return IndexArrays(
+            a=jnp.asarray(a), b=jnp.asarray(b), rm=jnp.asarray(rm),
+            ids_blocks=ids_b, fps_blocks=fps_b, blocks_head=head,
+            table_off=jnp.asarray(table_off, jnp.int32),
+            table_cnt=jnp.asarray(table_cnt, jnp.int32),
+            entries_id=jnp.asarray(entries_id),
+            entries_fp=jnp.asarray(entries_fp),
+            db=jnp.asarray(db, jnp.float32),
+            db_norm2=jnp.asarray(db_norm2, jnp.float32),
+            block_objs=int(block_objs), lane_pad=lp,
+        )
+
+    @staticmethod
+    def from_dict(arrays: dict, block_objs: int,
+                  lane_pad: Optional[int] = None) -> "IndexArrays":
+        """Adopt a legacy ``arrays: dict`` (deprecated-wrapper migration).
+
+        If the dict already carries a matching blockified layout it is
+        reused; otherwise the CSR view is blockified. The result is memoized
+        on the dict (private key) so repeated wrapper calls convert once.
+        """
+        cache = arrays.get("_ix_cache") if isinstance(arrays, dict) else None
+        if cache is not None and block_objs in cache:
+            return cache[block_objs]
+        have_blocks = (
+            all(k in arrays for k in ("ids_blocks", "fps_blocks", "blocks_head"))
+            and arrays.get("_blockified_objs", block_objs) == block_objs)
+        db = arrays["db"]
+        db_norm2 = arrays.get("db_norm2")
+        if db_norm2 is None:
+            db_norm2 = jnp.sum(jnp.asarray(db, jnp.float32) ** 2, axis=-1)
+        if have_blocks:
+            # the alignment, NOT the padded row width BLKp (ids_blocks.shape[1]
+            # = block_objs rounded up to lane_pad): conflating them would make
+            # a later with_block_objs() pack tiny blocks into BLKp-wide rows
+            lp = int(arrays.get("_lane_pad", native_lane_pad()))
+            ix = IndexArrays(
+                a=arrays["a"], b=arrays["b"], rm=arrays["rm"],
+                ids_blocks=arrays["ids_blocks"], fps_blocks=arrays["fps_blocks"],
+                blocks_head=arrays["blocks_head"],
+                table_off=arrays["table_off"], table_cnt=arrays["table_cnt"],
+                entries_id=arrays["entries_id"], entries_fp=arrays["entries_fp"],
+                db=db, db_norm2=db_norm2,
+                block_objs=int(block_objs), lane_pad=lp,
+            )
+        else:
+            ix = IndexArrays.from_csr(
+                a=arrays["a"], b=arrays["b"], rm=arrays["rm"],
+                table_off=arrays["table_off"], table_cnt=arrays["table_cnt"],
+                entries_id=arrays["entries_id"], entries_fp=arrays["entries_fp"],
+                db=db, db_norm2=db_norm2, block_objs=block_objs,
+                lane_pad=lane_pad,
+            )
+        if isinstance(arrays, dict):
+            arrays.setdefault("_ix_cache", {})[block_objs] = ix
+        return ix
+
+    def with_block_objs(self, block_objs: int,
+                        lane_pad: Optional[int] = None) -> "IndexArrays":
+        """Re-blockify under a different block size (the timing knob). The
+        CSR derived view is the source of truth for the repack; same-size
+        requests return self."""
+        lp = self.lane_pad if lane_pad is None else int(lane_pad)
+        if int(block_objs) == self.block_objs and lp == self.lane_pad:
+            return self
+        return IndexArrays.from_csr(
+            a=self.a, b=self.b, rm=self.rm,
+            table_off=self.table_off, table_cnt=self.table_cnt,
+            entries_id=self.entries_id, entries_fp=self.entries_fp,
+            db=self.db, db_norm2=self.db_norm2,
+            block_objs=int(block_objs), lane_pad=lp,
+        )
+
+    def as_dict(self) -> dict:
+        """Legacy flat-dict view (deprecated-wrapper compatibility)."""
+        out = {name: getattr(self, name) for name in self.array_fields()}
+        out["_blockified_objs"] = self.block_objs
+        out["_lane_pad"] = self.lane_pad
+        return out
 
 
 @dataclasses.dataclass
@@ -62,31 +213,54 @@ class IndexStats:
 class E2LSHIndex:
     params: LSHParams
     family: HashFamily
-    table_off: jnp.ndarray   # [r, L, 2^u] int32
-    table_cnt: jnp.ndarray   # [r, L, 2^u] int32
-    entries_id: jnp.ndarray  # [E] int32
-    entries_fp: jnp.ndarray  # [E] uint16
-    db: jnp.ndarray          # [n, d] float32
+    arrays: IndexArrays
     stats: IndexStats
 
+    # -- legacy field access (the CSR view used by older call sites) --------
+    @property
+    def table_off(self) -> jnp.ndarray:
+        return self.arrays.table_off
+
+    @property
+    def table_cnt(self) -> jnp.ndarray:
+        return self.arrays.table_cnt
+
+    @property
+    def entries_id(self) -> jnp.ndarray:
+        return self.arrays.entries_id
+
+    @property
+    def entries_fp(self) -> jnp.ndarray:
+        return self.arrays.entries_fp
+
+    @property
+    def db(self) -> jnp.ndarray:
+        return self.arrays.db
+
     def as_arrays(self) -> dict:
-        """Flat dict of device arrays (for jit/shard_map plumbing)."""
-        return dict(
-            a=self.family.a, b=self.family.b, rm=self.family.rm,
-            table_off=self.table_off, table_cnt=self.table_cnt,
-            entries_id=self.entries_id, entries_fp=self.entries_fp, db=self.db,
-        )
+        """DEPRECATED flat-dict view; use the typed ``.arrays`` pytree."""
+        import warnings
+        warnings.warn("E2LSHIndex.as_arrays() is deprecated; use the typed "
+                      "IndexArrays pytree at E2LSHIndex.arrays",
+                      DeprecationWarning, stacklevel=2)
+        return self.arrays.as_dict()
+
+    # The checkpoint persists the CSR source of truth + layout metadata only:
+    # the lane-padded block store is ~2.7x the CSR bytes and blockify_entries
+    # reproduces it bit-for-bit from the CSR view (test_build_emits_native_
+    # blockified_layout), so load() re-derives it (and db_norm2) instead.
+    _SAVED_FIELDS = ("a", "b", "rm", "table_off", "table_cnt",
+                     "entries_id", "entries_fp", "db")
 
     def save(self, path: str | pathlib.Path) -> None:
+        ix = self.arrays
         p = pathlib.Path(path)
         p.parent.mkdir(parents=True, exist_ok=True)
         np.savez_compressed(
             p,
-            a=np.asarray(self.family.a), b=np.asarray(self.family.b),
-            rm=np.asarray(self.family.rm),
-            table_off=np.asarray(self.table_off), table_cnt=np.asarray(self.table_cnt),
-            entries_id=np.asarray(self.entries_id), entries_fp=np.asarray(self.entries_fp),
-            db=np.asarray(self.db),
+            **{name: np.asarray(getattr(ix, name))
+               for name in self._SAVED_FIELDS},
+            layout_meta=np.asarray([ix.block_objs, ix.lane_pad], np.int64),
             params=np.array([dataclasses.asdict(self.params)], dtype=object),
             stats=np.array([dataclasses.asdict(self.stats)], dtype=object),
         )
@@ -102,12 +276,18 @@ class E2LSHIndex:
             a=jnp.asarray(z["a"]), b=jnp.asarray(z["b"]), rm=jnp.asarray(z["rm"]),
             w=params.w, u=params.u, fp_bits=params.fp_bits,
         )
-        return E2LSHIndex(
-            params=params, family=family,
-            table_off=jnp.asarray(z["table_off"]), table_cnt=jnp.asarray(z["table_cnt"]),
-            entries_id=jnp.asarray(z["entries_id"]), entries_fp=jnp.asarray(z["entries_fp"]),
-            db=jnp.asarray(z["db"]), stats=stats,
+        if "layout_meta" in z.files:
+            bo, lp = (int(v) for v in z["layout_meta"])
+        else:  # pre-blockified checkpoint: CSR only, current-backend layout
+            bo, lp = params.block_objs, None
+        arrays = IndexArrays.from_csr(
+            a=z["a"], b=z["b"], rm=z["rm"],
+            table_off=z["table_off"], table_cnt=z["table_cnt"],
+            entries_id=z["entries_id"], entries_fp=z["entries_fp"],
+            db=z["db"], block_objs=bo, lane_pad=lp,
         )
+        return E2LSHIndex(params=params, family=family, arrays=arrays,
+                          stats=stats)
 
 
 def _pack_radius_table(
@@ -150,10 +330,18 @@ def build_index(
     key: Optional[jax.Array] = None,
     family: Optional[HashFamily] = None,
     hash_batch: int = 262144,
+    deterministic: bool = True,
+    lane_pad: Optional[int] = None,
 ) -> E2LSHIndex:
-    """Build the full multi-radius index (paper Sec. 5.3).
+    """Build the full multi-radius index (paper Sec. 5.3), emitting the
+    blockified `IndexArrays` natively (packing runs in NumPy; the block
+    store is laid out before anything touches the device).
 
-    Hashing runs in JAX (batched over objects); packing runs in NumPy.
+    `deterministic=True` (default) computes build-time hash projections with
+    a float64 accumulation on the host, making index contents reproducible
+    across processes and thread counts (the device GEMM's reduction order is
+    thread-count-dependent). Set False to hash on the accelerator (faster
+    for huge builds, not bit-reproducible across hosts).
     """
     db = np.asarray(db)
     n, d = db.shape
@@ -174,11 +362,19 @@ def build_index(
     storage_blocks = 0
     max_bucket = 0
     db_f32 = db.astype(np.float32)
+    if deterministic:
+        # bound the [batch, L*m] float64 projection scratch to ~256 MB
+        hash_batch = max(1024, min(hash_batch, (32 << 20) // max(1, L * params.m)))
     for t, radius in enumerate(params.radii):
-        # hash all objects for radius t (batched to bound device memory)
+        # hash all objects for radius t (batched to bound memory)
         buckets, fps = [], []
         for s in range(0, n, hash_batch):
-            bkt, f = hash_points_radius(family, jnp.asarray(db_f32[s:s + hash_batch]), t, float(radius))
+            if deterministic:
+                bkt, f = hash_points_radius_deterministic(
+                    family, db_f32[s:s + hash_batch], t, float(radius))
+            else:
+                bkt, f = hash_points_radius(
+                    family, jnp.asarray(db_f32[s:s + hash_batch]), t, float(radius))
             buckets.append(np.asarray(bkt))
             fps.append(np.asarray(f))
         bucket_np = np.concatenate(buckets, axis=0)
@@ -220,13 +416,10 @@ def build_index(
     )
     if entries_id.shape[0] >= 2**31:
         raise ValueError("entry space exceeds int32 addressing; shard the index")
-    return E2LSHIndex(
-        params=params,
-        family=family,
-        table_off=jnp.asarray(toff_all.astype(np.int32)),
-        table_cnt=jnp.asarray(tcnt_all),
-        entries_id=jnp.asarray(entries_id),
-        entries_fp=jnp.asarray(entries_fp),
-        db=jnp.asarray(db_f32),
-        stats=stats,
+    arrays = IndexArrays.from_csr(
+        a=family.a, b=family.b, rm=family.rm,
+        table_off=toff_all.astype(np.int32), table_cnt=tcnt_all,
+        entries_id=entries_id, entries_fp=entries_fp, db=db_f32,
+        block_objs=params.block_objs, lane_pad=lane_pad,
     )
+    return E2LSHIndex(params=params, family=family, arrays=arrays, stats=stats)

@@ -9,24 +9,34 @@ For each radius R in (1, c, c^2, ...):
      merge into the running top-k (dedup by id), and mark the query done when
      k results lie within c*R (top-k c-ANNS per Sec. 2.1).
 
-Two executable engines produce identical results:
+The public API is ONE typed entry point over pluggable execution plans —
+the paper's own framing (Secs. 4-5: one algorithm, different execution
+tiers, only the cost model changes):
 
-* ``query_batch`` — the reference ORACLE: all radii unrolled at trace time
-  with done-masking, per-radius einsum hashing and a dense gather chain walk.
-  Simple, obviously correct, and the parity target for everything else.
-* ``query_batch_fused`` — the production engine: the whole radius schedule's
+    engine = SearchEngine(index)            # index: E2LSHoS / E2LSHIndex /
+    res = engine.query(qs, plan="fused")    #        ShardedIndexArrays
+
+Plans over a single-device `IndexArrays`:
+
+* ``plan="fused"``  — the production engine: the whole radius schedule's
   query hashes are precomputed in ONE kernel dispatch
-  (kernels.lsh_hash_all_radii: a single MXU matmul over r*L*m projection
-  columns), the chain walk reads the blockified block store through
-  kernels.bucket_probe (scalar-prefetch gather + fingerprint filter on TPU),
-  the distance epilogue runs through kernels.l2_distance_gathered, and the
-  radius loop is a ``jax.lax.while_loop`` INSIDE the jitted computation — so
-  early exit costs zero device->host syncs. One dispatch per query batch.
+  (kernels.lsh_hash_all_radii), the chain walk reads the natively blockified
+  block store through kernels.bucket_probe, the distance epilogue runs
+  through kernels.l2_distance_gathered, and the radius loop is a
+  ``jax.lax.while_loop`` INSIDE the jitted computation — early exit costs
+  zero device->host syncs. One dispatch per query batch.
+* ``plan="oracle"`` — the reference: all radii unrolled at trace time with
+  done-masking, per-radius einsum hashing and a dense CSR gather chain walk.
+  Simple, obviously correct, and the parity target for everything else.
+* ``plan="host"``   — the pre-fusion host-driven loop (one jitted call + one
+  device->host sync per radius), kept for benchmarking dispatch overhead.
 
-``query_batch_adaptive`` (the public adaptive entry point) routes to the
-fused engine; the pre-fusion host-driven loop survives as
-``query_batch_adaptive_host`` for benchmarking the dispatch overhead it paid
-(one jitted call + one device->host sync per radius).
+Plans over a `ShardedIndexArrays` (requires `mesh=`):
+
+* ``plan="sharded"`` — the fused engine dispatched per device inside
+  shard_map over per-shard blockified stores (core.distributed);
+* ``plan="oracle"``  — the same shard_map with the local oracle (the
+  bit-exact parity target for the sharded plan).
 
 All shapes are fixed (TPU requirement): the candidate buffer holds SBUF >= S
 slots, chains are walked for a static `max_chain` steps with masking.
@@ -38,10 +48,17 @@ round-robin across the L buckets (chunk j of every active bucket per step)
 instead of bucket-sequential; both orders examine an arbitrary S-subset of
 candidates, and round-robin is the batched-gather (queue-depth-maximizing)
 order on TPU. The S cap still truncates chains mid-bucket.
+
+The seed's free functions (`query_batch`, `query_batch_fused`,
+`query_batch_adaptive`, `query_batch_adaptive_host`, `ensure_fused_arrays`,
+`make_query_fn`) remain as thin DEPRECATED wrappers for one PR; internal
+call sites must use `SearchEngine` (the test suite turns repro-internal
+DeprecationWarnings into errors).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Optional
 
@@ -50,17 +67,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from .hashing import fmix32
+from .index import IndexArrays
 from .probabilities import LSHParams
-from ..kernels.bucket_probe.ops import blockify_entries
 from ..kernels.bucket_probe.ops import bucket_probe
 from ..kernels.dispatch import on_tpu
 from ..kernels.l2_distance.ops import l2_distance_gathered
 from ..kernels.lsh_hash.ops import lsh_hash_all_radii
 
 __all__ = [
-    "QueryConfig", "QueryResult", "query_batch", "query_batch_fused",
-    "query_batch_adaptive", "query_batch_adaptive_host", "ensure_fused_arrays",
-    "make_query_fn",
+    "QueryConfig", "QueryResult", "SearchEngine",
+    # deprecated wrappers (one-PR migration shims)
+    "query_batch", "query_batch_fused", "query_batch_adaptive",
+    "query_batch_adaptive_host", "ensure_fused_arrays", "make_query_fn",
 ]
 
 _INVALID = np.int32(2**31 - 1)
@@ -159,24 +177,25 @@ def _append_candidates(buf_id, count, flat_id, flat_ok, S, SBUF):
     return buf_id, count
 
 
-def _probe_radius(arrays, queries, qnorm2, t, radius, cfg: QueryConfig, active_q):
+def _probe_radius(ix: IndexArrays, queries, qnorm2, t, radius, cfg: QueryConfig,
+                  active_q):
     """One (R, c)-NN probe for every query in the batch (ORACLE path).
 
-    Returns (cand_id [Q, SBUF], cand_d2 [Q, SBUF], stats dict).
-    `active_q` masks queries already done (their I/O is not counted and their
-    buffers are ignored by the caller).
+    Reads the CSR derived view of the block store. Returns (cand_id [Q, SBUF],
+    cand_d2 [Q, SBUF], stats dict). `active_q` masks queries already done
+    (their I/O is not counted and their buffers are ignored by the caller).
     """
     Q = queries.shape[0]
     L, BLK, S, SBUF = cfg.L, cfg.block_objs, cfg.S, cfg.sbuf
     wr = jnp.float32(cfg.w * radius)
-    a_t = jax.lax.dynamic_index_in_dim(arrays["a"], t, 0, keepdims=False)
-    b_t = jax.lax.dynamic_index_in_dim(arrays["b"], t, 0, keepdims=False)
-    rm_t = jax.lax.dynamic_index_in_dim(arrays["rm"], t, 0, keepdims=False)
+    a_t = jax.lax.dynamic_index_in_dim(ix.a, t, 0, keepdims=False)
+    b_t = jax.lax.dynamic_index_in_dim(ix.b, t, 0, keepdims=False)
+    rm_t = jax.lax.dynamic_index_in_dim(ix.rm, t, 0, keepdims=False)
     bucket, qfp = _hash_queries(queries, a_t, b_t, rm_t, wr, cfg.u, cfg.fp_bits)
 
     # hash-table lookup (Step 1): flatten (l, bucket) -> one gather
-    toff_t = jax.lax.dynamic_index_in_dim(arrays["table_off"], t, 0, keepdims=False)
-    tcnt_t = jax.lax.dynamic_index_in_dim(arrays["table_cnt"], t, 0, keepdims=False)
+    toff_t = jax.lax.dynamic_index_in_dim(ix.table_off, t, 0, keepdims=False)
+    tcnt_t = jax.lax.dynamic_index_in_dim(ix.table_cnt, t, 0, keepdims=False)
     flat = jnp.arange(L, dtype=jnp.int32)[None, :] * (1 << cfg.u) + bucket
     off = jnp.take(toff_t.reshape(-1), flat, axis=0)     # [Q, L]
     cnt = jnp.take(tcnt_t.reshape(-1), flat, axis=0)     # [Q, L]
@@ -186,8 +205,6 @@ def _probe_radius(arrays, queries, qnorm2, t, radius, cfg: QueryConfig, active_q
     count = jnp.zeros((Q,), dtype=jnp.int32)
     blocks_read = jnp.zeros((Q,), dtype=jnp.int32)
     slots = jnp.arange(BLK, dtype=jnp.int32)
-    entries_id = arrays["entries_id"]
-    entries_fp = arrays["entries_fp"]
 
     for step in range(cfg.max_chain):
         # a bucket chunk is read iff the bucket still has entries at this depth
@@ -200,8 +217,8 @@ def _probe_radius(arrays, queries, qnorm2, t, radius, cfg: QueryConfig, active_q
         in_bucket = (step * BLK + slots)[None, None, :] < cnt[:, :, None]
         ok_read = active[:, :, None] & in_bucket
         idx_safe = jnp.where(ok_read, idx, 0)
-        eid = jnp.take(entries_id, idx_safe, axis=0)
-        efp = jnp.take(entries_fp, idx_safe, axis=0).astype(jnp.uint32)
+        eid = jnp.take(ix.entries_id, idx_safe, axis=0)
+        efp = jnp.take(ix.entries_fp, idx_safe, axis=0).astype(jnp.uint32)
         ok = ok_read & (efp == qfp[:, :, None])                   # fingerprint filter
         buf_id, count = _append_candidates(
             buf_id, count, eid.reshape(Q, L * BLK), ok.reshape(Q, L * BLK),
@@ -210,9 +227,9 @@ def _probe_radius(arrays, queries, qnorm2, t, radius, cfg: QueryConfig, active_q
     # distance check (Step 3) against the DRAM-tier coordinates
     valid = buf_id != _INVALID
     safe_id = jnp.where(valid, buf_id, 0)
-    coords = jnp.take(arrays["db"], safe_id, axis=0)              # [Q, SBUF, d]
+    coords = jnp.take(ix.db, safe_id, axis=0)                     # [Q, SBUF, d]
     dot = jnp.einsum("qsd,qd->qs", coords, queries, preferred_element_type=jnp.float32)
-    xn2 = jnp.take(arrays["db_norm2"], safe_id, axis=0)
+    xn2 = jnp.take(ix.db_norm2, safe_id, axis=0)
     d2 = xn2 - 2.0 * dot + qnorm2[:, None]
     d2 = jnp.where(valid, jnp.maximum(d2, 0.0), jnp.inf)
 
@@ -226,7 +243,7 @@ def _probe_radius(arrays, queries, qnorm2, t, radius, cfg: QueryConfig, active_q
     return buf_id, d2, stats
 
 
-def _probe_radius_fused(arrays, queries, qnorm2, cnt, head, qfp,
+def _probe_radius_fused(ix: IndexArrays, queries, qnorm2, cnt, head, qfp,
                         cfg: QueryConfig, active_q):
     """One (R, c)-NN probe on the blockified store (FUSED path).
 
@@ -245,9 +262,7 @@ def _probe_radius_fused(arrays, queries, qnorm2, cnt, head, qfp,
     Q = queries.shape[0]
     L, BLK, S, C = cfg.L, cfg.block_objs, cfg.S, cfg.max_chain
     SBUF = _fused_sbuf(cfg)
-    ids_blocks = arrays["ids_blocks"]
-    fps_blocks = arrays["fps_blocks"]
-    BLKp = ids_blocks.shape[1]
+    BLKp = ix.ids_blocks.shape[1]
     nonempty = (cnt > 0) & active_q[:, None]
 
     # one gather for the whole chain walk: chunk c of bucket (q, l) is row
@@ -258,7 +273,7 @@ def _probe_radius_fused(arrays, queries, qnorm2, cnt, head, qfp,
     rows = jnp.where(readable, head[:, None, :] + steps[None, :, None], 0)
     qfp_rep = jnp.broadcast_to(qfp.astype(jnp.int32)[:, None, :], (Q, C, L))
     filt = bucket_probe(rows.reshape(-1), qfp_rep.reshape(-1),
-                        ids_blocks, fps_blocks)          # [Q*C*L, BLKp]
+                        ix.ids_blocks, ix.fps_blocks)     # [Q*C*L, BLKp]
     match = filt.reshape(Q, C, L * BLKp)
 
     # replay the oracle's per-step S-budget gate: chunks at depth c are read
@@ -285,8 +300,8 @@ def _probe_radius_fused(arrays, queries, qnorm2, cnt, head, qfp,
     # distance check (Step 3) against the DRAM-tier coordinates
     valid = buf_id != _INVALID
     safe_id = jnp.where(valid, buf_id, 0)
-    coords = jnp.take(arrays["db"], safe_id, axis=0)              # [Q, SBUF, d]
-    xn2 = jnp.take(arrays["db_norm2"], safe_id, axis=0)
+    coords = jnp.take(ix.db, safe_id, axis=0)                     # [Q, SBUF, d]
+    xn2 = jnp.take(ix.db_norm2, safe_id, axis=0)
     d2 = l2_distance_gathered(queries, coords, xn2, qnorm2)
     d2 = jnp.where(valid, jnp.maximum(d2, 0.0), jnp.inf)
 
@@ -341,9 +356,9 @@ def _update_state(state, cid, cd2, st, t, radius_thresh2, cfg: QueryConfig):
     return (best_id, best_d2, done, radii_searched, nio_t, nio_b, cands, probe_sizes)
 
 
-def _radius_step(arrays, queries, qnorm2, state, t, radius, cfg: QueryConfig):
+def _radius_step(ix, queries, qnorm2, state, t, radius, cfg: QueryConfig):
     active_q = ~state[2]
-    cid, cd2, st = _probe_radius(arrays, queries, qnorm2, t, radius, cfg, active_q)
+    cid, cd2, st = _probe_radius(ix, queries, qnorm2, t, radius, cfg, active_q)
     thresh = jnp.float32((cfg.c * radius) ** 2)
     return _update_state(state, cid, cd2, st, t, thresh, cfg)
 
@@ -380,36 +395,9 @@ def _result_from_state(state, cfg) -> QueryResult:
     )
 
 
-def _prep(arrays, queries):
-    arrays = dict(arrays)
-    if "db_norm2" not in arrays:
-        arrays["db_norm2"] = jnp.sum(
-            arrays["db"].astype(jnp.float32) ** 2, axis=-1)
+def _prep_queries(queries):
     queries = queries.astype(jnp.float32)
-    qnorm2 = jnp.sum(queries * queries, axis=-1)
-    return arrays, queries, qnorm2
-
-
-def _public_arrays(arrays: dict) -> dict:
-    """Strip host-side bookkeeping (the blockify cache) before jit boundaries
-    so cache mutations never change a jitted function's signature."""
-    return {k: v for k, v in arrays.items() if not k.startswith("_")}
-
-
-@partial(jax.jit, static_argnames=("cfg",))
-def _query_batch_jit(arrays: dict, queries: jnp.ndarray,
-                     cfg: QueryConfig) -> QueryResult:
-    arrays, queries, qnorm2 = _prep(arrays, queries)
-    state = _init_state(queries.shape[0], cfg)
-    for t, radius in enumerate(cfg.radii):
-        state = _radius_step(arrays, queries, qnorm2, state, t, float(radius), cfg)
-    return _result_from_state(state, cfg)
-
-
-def query_batch(arrays: dict, queries: jnp.ndarray, cfg: QueryConfig) -> QueryResult:
-    """Reference ORACLE: all radii unrolled with done-masking. jit-able and
-    shard_map-able; the fused engine must match it bit-for-bit."""
-    return _query_batch_jit(_public_arrays(arrays), jnp.asarray(queries), cfg)
+    return queries, jnp.sum(queries * queries, axis=-1)
 
 
 def _fused_sbuf(cfg: QueryConfig) -> int:
@@ -423,46 +411,41 @@ def _fused_sbuf(cfg: QueryConfig) -> int:
     return cfg.sbuf if on_tpu() else max(8, -(-cfg.S // 8) * 8)
 
 
-def ensure_fused_arrays(arrays: dict, block_objs: int) -> dict:
-    """Add the blockified block-store layout the fused engine consumes.
+# --------------------------------------------------------------------------
+# Plan bodies: traceable over an IndexArrays pytree. These are what the
+# jitted plan entry points AND the shard_map local plans (core.distributed)
+# share — the whole point of the typed seam.
+# --------------------------------------------------------------------------
 
-    Host-side and memoized: the augmented dict is cached on `arrays` itself
-    (under a private key), so repeated functional-API calls with the same
-    arrays dict blockify once per block size instead of per query batch.
-    Production builds would emit this layout directly at index-build time;
-    keeping the converter here preserves one build path in core while every
-    engine shares the CSR source of truth. Block rows are padded to the TPU
-    lane width only when a TPU will read them; the jnp gather path gets
-    tight rows.
-    """
-    if arrays.get("_blockified_objs") == block_objs:
-        return arrays
-    cache = arrays.setdefault("_fused_cache", {})
-    if block_objs not in cache:
-        ids_b, fps_b, head, _ = blockify_entries(
-            np.asarray(arrays["entries_id"]), np.asarray(arrays["entries_fp"]),
-            np.asarray(arrays["table_off"]), np.asarray(arrays["table_cnt"]),
-            block_objs, lane_pad=128 if on_tpu() else 8,
-        )
-        out = {k: v for k, v in arrays.items() if k != "_fused_cache"}
-        out["ids_blocks"] = ids_b
-        out["fps_blocks"] = fps_b
-        out["blocks_head"] = head
-        out["_blockified_objs"] = block_objs
-        cache[block_objs] = out
-    return cache[block_objs]
+def oracle_plan_body(ix: IndexArrays, queries: jnp.ndarray,
+                     cfg: QueryConfig) -> QueryResult:
+    """Reference ORACLE plan: all radii unrolled with done-masking, CSR
+    gathers. jit-able and shard_map-able; every other plan must match it."""
+    queries, qnorm2 = _prep_queries(queries)
+    state = _init_state(queries.shape[0], cfg)
+    for t, radius in enumerate(cfg.radii):
+        state = _radius_step(ix, queries, qnorm2, state, t, float(radius), cfg)
+    return _result_from_state(state, cfg)
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def _query_batch_fused_jit(arrays: dict, queries: jnp.ndarray,
-                           cfg: QueryConfig) -> QueryResult:
-    arrays, queries, qnorm2 = _prep(arrays, queries)
+def fused_plan_body(ix: IndexArrays, queries: jnp.ndarray,
+                    cfg: QueryConfig) -> QueryResult:
+    """FUSED plan: precomputed all-radius hashes + table lookups, blockified
+    kernel-backed probes, device-side while_loop early exit. Consumes the
+    block store the build emitted natively."""
+    if ix.block_objs != cfg.block_objs:  # a raise survives python -O
+        raise ValueError(
+            f"IndexArrays blockified at block_objs={ix.block_objs} but the "
+            f"query plan wants {cfg.block_objs}; re-blockify with "
+            "IndexArrays.with_block_objs (SearchEngine does this "
+            "automatically)")
+    queries, qnorm2 = _prep_queries(queries)
     Q = queries.shape[0]
     r = len(cfg.radii)
     # Step 1 for the WHOLE schedule: one kernel dispatch hashes every radius
     # (the per-radius a/b/rm tensors are stacked [r, ...] already)
     bucket_all, qfp_all = lsh_hash_all_radii(
-        queries, arrays["a"], arrays["b"], arrays["rm"],
+        queries, ix.a, ix.b, ix.rm,
         w=cfg.w, radii=cfg.radii, u=cfg.u, fp_bits=cfg.fp_bits,
     )
     # ... and the hash-table lookups for the whole schedule too: bucket sizes
@@ -471,8 +454,8 @@ def _query_batch_fused_jit(arrays: dict, queries: jnp.ndarray,
     tl = (jnp.arange(r, dtype=jnp.int32)[:, None, None] * cfg.L
           + jnp.arange(cfg.L, dtype=jnp.int32)[None, None, :])
     flat_all = tl * (1 << cfg.u) + bucket_all                  # [r, Q, L]
-    cnt_all = jnp.take(arrays["table_cnt"].reshape(-1), flat_all, axis=0)
-    head_all = jnp.take(arrays["blocks_head"].reshape(-1), flat_all, axis=0)
+    cnt_all = jnp.take(ix.table_cnt.reshape(-1), flat_all, axis=0)
+    head_all = jnp.take(ix.blocks_head.reshape(-1), flat_all, axis=0)
     thresh2 = jnp.asarray([(cfg.c * float(rad)) ** 2 for rad in cfg.radii],
                           jnp.float32)
     state0 = _init_state(Q, cfg)
@@ -488,7 +471,7 @@ def _query_batch_fused_jit(arrays: dict, queries: jnp.ndarray,
         qfp = jax.lax.dynamic_index_in_dim(qfp_all, t, 0, keepdims=False)
         active_q = ~state[2]
         cid, cd2, st = _probe_radius_fused(
-            arrays, queries, qnorm2, cnt, head, qfp, cfg, active_q)
+            ix, queries, qnorm2, cnt, head, qfp, cfg, active_q)
         state = _update_state(state, cid, cd2, st, t, thresh2[t], cfg)
         return t + 1, state
 
@@ -496,54 +479,263 @@ def _query_batch_fused_jit(arrays: dict, queries: jnp.ndarray,
     return _result_from_state(state, cfg)
 
 
-def query_batch_fused(arrays: dict, queries: jnp.ndarray,
-                      cfg: QueryConfig) -> QueryResult:
-    """Fused single-dispatch engine: precomputed all-radius hashes, blockified
-    kernel-backed probes, and a device-side while_loop with real early exit.
-    Produces results identical to `query_batch` without its unrolled all-radii
-    cost or `query_batch_adaptive_host`'s per-radius host sync."""
-    arrays = ensure_fused_arrays(arrays, cfg.block_objs)
-    return _query_batch_fused_jit(_public_arrays(arrays), jnp.asarray(queries), cfg)
+@partial(jax.jit, static_argnames=("cfg",))
+def _oracle_jit(ix: IndexArrays, queries, cfg: QueryConfig) -> QueryResult:
+    return oracle_plan_body(ix, queries, cfg)
 
 
-def query_batch_adaptive(arrays: dict, queries: jnp.ndarray,
-                         cfg: QueryConfig) -> QueryResult:
-    """Adaptive early-exit query — now the fused while_loop engine (the
-    pre-fusion host-driven loop lives on as `query_batch_adaptive_host`)."""
-    return query_batch_fused(arrays, queries, cfg)
+@partial(jax.jit, static_argnames=("cfg",))
+def _fused_jit(ix: IndexArrays, queries, cfg: QueryConfig) -> QueryResult:
+    return fused_plan_body(ix, queries, cfg)
 
 
 @partial(jax.jit, static_argnames=("cfg", "t_static"))
-def _one_radius_jit(arrays, queries, qnorm2, state, t_static, cfg):
-    return _radius_step(arrays, queries, qnorm2, state, t_static,
+def _one_radius_jit(ix, queries, qnorm2, state, t_static, cfg):
+    return _radius_step(ix, queries, qnorm2, state, t_static,
                         float(cfg.radii[t_static]), cfg)
 
 
-def query_batch_adaptive_host(arrays: dict, queries: jnp.ndarray,
-                              cfg: QueryConfig) -> QueryResult:
+def _host_plan(ix: IndexArrays, queries: jnp.ndarray,
+               cfg: QueryConfig) -> QueryResult:
     """PRE-FUSION adaptive path, kept as the benchmark baseline: one jitted
     dispatch plus one device->host sync per radius. Identical results."""
-    arrays, queries, qnorm2 = _prep(_public_arrays(arrays), queries)
+    queries, qnorm2 = _prep_queries(jnp.asarray(queries))
     state = _init_state(queries.shape[0], cfg)
     for t in range(len(cfg.radii)):
-        state = _one_radius_jit(arrays, queries, qnorm2, state, t, cfg)
+        state = _one_radius_jit(ix, queries, qnorm2, state, t, cfg)
         if bool(jax.device_get(jnp.all(state[2]))):
             break
     return _result_from_state(state, cfg)
 
 
-def make_query_fn(params: LSHParams, *, k: int = 1, engine: str = "fused", **kw):
-    """Convenience: QueryConfig + closured query engine.
+# --------------------------------------------------------------------------
+# The facade
+# --------------------------------------------------------------------------
 
-    engine: "fused" (production single-dispatch path) or "oracle" (unrolled
-    reference). Serving closes over the returned fn.
+class SearchEngine:
+    """One query entry point over pluggable execution plans.
+
+    ``index`` may be an ``E2LSHoS`` facade, a bare ``E2LSHIndex``, or a
+    ``core.distributed.ShardedIndexArrays`` (then pass ``mesh=`` and the
+    sharded plans apply). The engine memoizes re-blockified layouts per
+    ``block_objs`` so the timing knob repacks once, and every plan receives
+    the same typed `IndexArrays` pytree.
     """
+
+    SINGLE_PLANS = ("fused", "host", "oracle")
+    SHARDED_PLANS = ("sharded", "oracle")
+
+    def __init__(self, index, *, mesh=None, index_axes=("shard",),
+                 query_axes=()):
+        if hasattr(index, "index") and hasattr(index, "tier"):  # E2LSHoS
+            index = index.index
+        self.params: LSHParams = index.params
+        self.mesh = mesh
+        self.index_axes = tuple(index_axes)
+        self.query_axes = tuple(query_axes)
+        if hasattr(index, "num_shards"):      # ShardedIndexArrays
+            self._sharded = index
+            self._single = None
+        else:                                  # E2LSHIndex
+            self._single = index
+            self._sharded = None
+        base: IndexArrays = index.arrays
+        self._by_block_objs = {base.block_objs: base}
+        self._base_block_objs = base.block_objs
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def plans(self) -> tuple:
+        return self.SHARDED_PLANS if self._sharded is not None else self.SINGLE_PLANS
+
+    @property
+    def default_plan(self) -> str:
+        return "sharded" if self._sharded is not None else "fused"
+
+    # -- typed array access -------------------------------------------------
+    def arrays(self, block_objs: Optional[int] = None) -> IndexArrays:
+        """The typed index pytree, re-blockified (and memoized) on demand."""
+        bo = int(block_objs or self._base_block_objs)
+        if bo not in self._by_block_objs:
+            if self._sharded is not None:
+                raise ValueError(
+                    "block_objs override is not supported for a sharded index "
+                    "(per-shard stores are blockified at build time)")
+            self._by_block_objs[bo] = (
+                self._by_block_objs[self._base_block_objs].with_block_objs(bo))
+        return self._by_block_objs[bo]
+
+    def config(self, *, k: int = 1, collect_probe_sizes: bool = False,
+               s_cap: Optional[int] = None, max_chain: int = 0,
+               block_objs: Optional[int] = None) -> QueryConfig:
+        cfg = QueryConfig.from_params(
+            self.params, k=k, max_chain=max_chain,
+            collect_probe_sizes=collect_probe_sizes,
+        )
+        # narrower gather chunks (timing knob): identical candidates and
+        # results; storage-block I/O accounting is replayed separately at
+        # the paper's 512 B granularity (io_count)
+        return cfg.replace(s_cap=s_cap, block_objs=block_objs)
+
+    # -- the entry point ----------------------------------------------------
+    def query(self, queries, *, plan: Optional[str] = None, k: int = 1,
+              s_cap: Optional[int] = None, block_objs: Optional[int] = None,
+              collect_probe_sizes: bool = False,
+              s_cap_per_shard: Optional[int] = None) -> QueryResult:
+        """Run a query batch under the selected execution plan.
+
+        plan: "fused" (production single-dispatch while_loop), "oracle"
+        (unrolled reference; on a sharded engine, the per-shard reference),
+        "host" (pre-fusion per-radius host loop, benchmarking only), or
+        "sharded" (fused engine per device inside shard_map). None selects
+        the production plan for the index type.
+        """
+        plan = plan or self.default_plan
+        queries = jnp.asarray(queries)
+        if self._sharded is not None:
+            if plan not in self.SHARDED_PLANS:
+                raise ValueError(
+                    f"unknown plan {plan!r} for a sharded index; expected one "
+                    f"of {self.SHARDED_PLANS}")
+            if collect_probe_sizes:
+                raise ValueError("collect_probe_sizes is not supported under "
+                                 "the sharded plans")
+            if block_objs is not None:
+                raise ValueError("block_objs override is not supported under "
+                                 "the sharded plans")
+            if self.mesh is None:
+                raise ValueError("sharded plans need SearchEngine(..., mesh=)")
+            from .distributed import sharded_query_result
+            return sharded_query_result(
+                self._sharded, queries, self.mesh, k=k,
+                index_axes=self.index_axes, query_axes=self.query_axes,
+                s_cap=s_cap, s_cap_per_shard=s_cap_per_shard,
+                local_plan="fused" if plan == "sharded" else "oracle",
+            )
+        if plan not in self.SINGLE_PLANS:
+            raise ValueError(f"unknown plan {plan!r}; expected one of "
+                             f"{self.SINGLE_PLANS + ('sharded',)} "
+                             "(sharded needs a ShardedIndexArrays index)")
+        if s_cap_per_shard is not None:
+            raise ValueError("s_cap_per_shard only applies to sharded plans; "
+                             "use s_cap for a single-device index")
+        cfg = self.config(k=k, collect_probe_sizes=collect_probe_sizes,
+                          s_cap=s_cap, block_objs=block_objs)
+        if plan == "fused":
+            return _fused_jit(self.arrays(cfg.block_objs), queries, cfg)
+        if plan == "host":
+            return _host_plan(self.arrays(), queries, cfg)
+        return _oracle_jit(self.arrays(), queries, cfg)
+
+    def make_plan_fn(self, *, plan: Optional[str] = None, k: int = 1, **kw):
+        """(cfg, fn): a QueryConfig plus a closure `fn(queries) -> QueryResult`
+        pinned to one plan — what serving loops close over (replaces the
+        deprecated `make_query_fn`). For single-index plans the config and
+        (re-blockified) arrays are resolved ONCE here, so the closure adds
+        zero per-call host work to the dispatch path."""
+        plan = plan or self.default_plan
+        if self._sharded is not None:
+            # query() kwargs that never reach config(); the returned cfg
+            # reflects the pre-shard schedule (sharded_query_result applies
+            # the per-shard S budget internally)
+            s_cap_per_shard = kw.pop("s_cap_per_shard", None)
+            cfg = self.config(k=k, **kw)
+
+            def fn(queries):
+                return self.query(queries, plan=plan, k=k,
+                                  s_cap_per_shard=s_cap_per_shard, **kw)
+
+            return cfg, fn
+        if plan not in self.SINGLE_PLANS:
+            raise ValueError(f"unknown plan {plan!r}; expected one of "
+                             f"{self.SINGLE_PLANS}")
+        cfg = self.config(k=k, **kw)
+        ix = self.arrays(cfg.block_objs if plan == "fused" else None)
+        run = {"fused": _fused_jit, "oracle": _oracle_jit,
+               "host": _host_plan}[plan]
+
+        def fn(queries):
+            return run(ix, jnp.asarray(queries), cfg)
+
+        return cfg, fn
+
+
+# --------------------------------------------------------------------------
+# Deprecated free-function wrappers (one-PR migration shims).
+#
+# tests/pytest.ini escalates DeprecationWarnings attributed to repro.* into
+# errors, so these cannot creep back into internal call sites.
+# --------------------------------------------------------------------------
+
+def _warn_deprecated(old: str, new: str):
+    warnings.warn(f"{old} is deprecated; use {new}. The wrapper will be "
+                  "removed next PR.", DeprecationWarning, stacklevel=3)
+
+
+def _coerce(arrays, cfg: QueryConfig, *, need_blocks: bool = False) -> IndexArrays:
+    if isinstance(arrays, IndexArrays):
+        if need_blocks and arrays.block_objs != cfg.block_objs:
+            return arrays.with_block_objs(cfg.block_objs)
+        return arrays
+    return IndexArrays.from_dict(arrays, cfg.block_objs)
+
+
+def query_batch(arrays, queries, cfg: QueryConfig) -> QueryResult:
+    """DEPRECATED: use ``SearchEngine(index).query(qs, plan="oracle")``."""
+    _warn_deprecated("query_batch", 'SearchEngine(index).query(qs, plan="oracle")')
+    return _oracle_jit(_coerce(arrays, cfg), jnp.asarray(queries), cfg)
+
+
+def query_batch_fused(arrays, queries, cfg: QueryConfig) -> QueryResult:
+    """DEPRECATED: use ``SearchEngine(index).query(qs, plan="fused")``."""
+    _warn_deprecated("query_batch_fused",
+                     'SearchEngine(index).query(qs, plan="fused")')
+    return _fused_jit(_coerce(arrays, cfg, need_blocks=True),
+                      jnp.asarray(queries), cfg)
+
+
+def query_batch_adaptive(arrays, queries, cfg: QueryConfig) -> QueryResult:
+    """DEPRECATED: use ``SearchEngine(index).query(qs, plan="fused")``."""
+    _warn_deprecated("query_batch_adaptive",
+                     'SearchEngine(index).query(qs, plan="fused")')
+    return _fused_jit(_coerce(arrays, cfg, need_blocks=True),
+                      jnp.asarray(queries), cfg)
+
+
+def query_batch_adaptive_host(arrays, queries, cfg: QueryConfig) -> QueryResult:
+    """DEPRECATED: use ``SearchEngine(index).query(qs, plan="host")``."""
+    _warn_deprecated("query_batch_adaptive_host",
+                     'SearchEngine(index).query(qs, plan="host")')
+    return _host_plan(_coerce(arrays, cfg), jnp.asarray(queries), cfg)
+
+
+def ensure_fused_arrays(arrays, block_objs: int):
+    """DEPRECATED: `build_index` emits the blockified `IndexArrays` natively;
+    there is nothing to ensure. Returns the legacy dict view for old call
+    sites (memoized per block size)."""
+    _warn_deprecated("ensure_fused_arrays",
+                     "the IndexArrays pytree emitted by build_index")
+    if isinstance(arrays, IndexArrays):
+        return arrays.with_block_objs(block_objs)
+    if arrays.get("_blockified_objs") == block_objs:
+        return arrays
+    cache = arrays.setdefault("_fused_dict_cache", {})
+    if block_objs not in cache:
+        ix = IndexArrays.from_dict(arrays, block_objs)
+        cache[block_objs] = ix.as_dict()
+    return cache[block_objs]
+
+
+def make_query_fn(params: LSHParams, *, k: int = 1, engine: str = "fused", **kw):
+    """DEPRECATED: use ``SearchEngine(index).make_plan_fn(plan=...)``."""
+    _warn_deprecated("make_query_fn", "SearchEngine(index).make_plan_fn(plan=...)")
     if engine not in ("fused", "oracle"):
         raise ValueError(f"unknown engine {engine!r}; expected 'fused' or 'oracle'")
     cfg = QueryConfig.from_params(params, k=k, **kw)
-    run = query_batch_fused if engine == "fused" else query_batch
 
     def fn(arrays, queries):
-        return run(arrays, queries, cfg)
+        ix = _coerce(arrays, cfg, need_blocks=(engine == "fused"))
+        run = _fused_jit if engine == "fused" else _oracle_jit
+        return run(ix, jnp.asarray(queries), cfg)
 
     return cfg, fn

@@ -16,6 +16,7 @@ scale near the first radius — the package's standard preprocessing step.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Callable, Dict
 
 import numpy as np
@@ -106,7 +107,9 @@ def nn_scale(gt_dists: np.ndarray, target: float = 1.2) -> float:
 def make_dataset(name: str, *, n: int = 20_000, n_queries: int = 64,
                  gt_k: int = 100, seed: int = 0) -> Dataset:
     spec = _SPECS[name]
-    rng = np.random.default_rng(seed + hash(name) % 65536)
+    # crc32, NOT hash(): str hashing is salted per process (PYTHONHASHSEED),
+    # which made the "same" dataset differ between runs of the serve CLI
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % 65536)
     # draw db and held-out queries from the SAME distribution (one call: the
     # mixture's cluster centers must be shared)
     n_easy = (3 * n_queries) // 4

@@ -5,8 +5,9 @@ public wrapper with padding + backend dispatch: Pallas lowers natively on
 TPU, every other backend gets the pure-jnp oracle), ref.py (the oracle).
 Kernels are validated on CPU via interpret=True against their oracles
 (tests/ sweeps shapes and dtypes); on TPU the same pallas_call lowers
-natively. The fused query engine (core.query.query_batch_fused) consumes the
-ops layer, so backend selection happens in exactly one place per kernel.
+natively. The fused query plan (core.query.SearchEngine, plan="fused")
+consumes the ops layer, so backend selection happens in exactly one place
+per kernel.
 """
 from .lsh_hash import (lsh_hash, lsh_hash_all_radii, lsh_hash_all_radii_ref,
                        lsh_hash_ref)

@@ -2,10 +2,12 @@
 
 `blockify_entries` converts the contiguous CSR entry layout of core.index
 into the 2D block-store layout ([NB, BLKp] rows = the paper's 512 B blocks)
-that the scalar-prefetch kernel consumes. Production would build this layout
-directly; the converter keeps one build path in core. It is fully vectorized
-(one scatter over all entries) so the fused query engine can blockify whole
-multi-radius tables at build time.
+that the scalar-prefetch kernel consumes. `core.index.build_index` calls it
+at BUILD time (via `IndexArrays.from_csr`), so the blockified store is the
+index's native representation and CSR the derived view; query setup never
+repacks unless the `block_objs` timing knob asks for a different layout. It
+is fully vectorized (one scatter over all entries), which is what makes
+build-time blockification of whole multi-radius tables cheap.
 
 Dispatch policy: the scalar-prefetch Pallas kernel lowers natively on TPU;
 every other backend gets the jnp gather oracle (identical results). Pass

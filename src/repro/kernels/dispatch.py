@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["on_tpu", "use_pallas_default"]
+__all__ = ["on_tpu", "use_pallas_default", "native_lane_pad"]
 
 
 def on_tpu() -> bool:
@@ -20,3 +20,13 @@ def use_pallas_default() -> bool:
     """Backend policy: Pallas lowers natively on TPU; every other backend
     runs the pure-jnp oracle (bit-identical math, no interpret overhead)."""
     return on_tpu()
+
+
+def native_lane_pad() -> int:
+    """Block-store row-width alignment for the current backend.
+
+    128 is the TPU lane contract of the bucket_probe scalar-prefetch kernel;
+    off-TPU the jnp gather path would stream dead padding columns, so block
+    rows are padded only to the SIMD-friendly 8. `core.index.build_index`
+    emits the blockified layout at this width."""
+    return 128 if on_tpu() else 8

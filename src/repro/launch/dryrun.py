@@ -185,17 +185,28 @@ def run_ann_cell(multi_pod: bool, *, n: int = 1_000_000_000, d: int = 128,
         r, L, u = params.r, params.L, params.u
         E_shard = n_shard * L * r
         sds = jax.ShapeDtypeStruct
-        arrays = dict(
+        from ..core.index import IndexArrays
+        from ..kernels.dispatch import native_lane_pad
+        # the cell models the CSR gather path (local_plan="oracle"), so the
+        # block-store leaves only need placeholder shapes — at BIGANN bucket
+        # sizes (~2 objs/bucket) the lane-padded block rows would dominate
+        # modeled bytes and drown the analytic CSR traffic model below
+        lane_pad = native_lane_pad()
+        arrays = IndexArrays(
             a=sds((r, L, params.m, d), jnp.float32),
             b=sds((r, L, params.m), jnp.float32),
             rm=sds((r, L, params.m), jnp.uint32),
+            ids_blocks=sds((devs, 8, lane_pad), jnp.int32),
+            fps_blocks=sds((devs, 8, lane_pad), jnp.int32),
+            blocks_head=sds((devs, r, L, 1 << u), jnp.int32),
             table_off=sds((devs, r, L, 1 << u), jnp.int32),
             table_cnt=sds((devs, r, L, 1 << u), jnp.int32),
             entries_id=sds((devs, E_shard), jnp.int32),
             entries_fp=sds((devs, E_shard), jnp.dtype(fp_dtype)),
             db=sds((devs, n_shard, d), jnp.dtype(db_dtype)),
+            db_norm2=sds((devs, n_shard), jnp.float32),
+            block_objs=params.block_objs, lane_pad=lane_pad,
         )
-        arrays["db_norm2"] = sds((devs, n_shard), jnp.float32)
         index_axes = mesh.axis_names
         shard_offsets = sds((devs,), jnp.int32)
         queries = sds((n_queries, d), jnp.float32)
@@ -226,15 +237,14 @@ def run_ann_cell(multi_pod: bool, *, n: int = 1_000_000_000, d: int = 128,
 
         def fn(arr, offs, qs):
             tmp = dc.replace(sharded, arrays=arr, shard_offsets=offs)
-            return dist.sharded_query(tmp, qs, mesh, k=k,
-                                      index_axes=index_axes,
-                                      s_cap_per_shard=s_cap)
+            return dist.sharded_query_result(tmp, qs, mesh, k=k,
+                                             index_axes=index_axes,
+                                             s_cap_per_shard=s_cap,
+                                             local_plan="oracle")
 
         in_sh = (
-            {kk: NamedSharding(mesh, P(index_axes, *([None] * (len(v.shape) - 1))))
-             if kk not in ("a", "b", "rm")
-             else NamedSharding(mesh, P(*([None] * len(v.shape))))
-             for kk, v in arrays.items()},
+            jax.tree_util.tree_map(lambda sp: NamedSharding(mesh, sp),
+                                   sharded.specs(index_axes)),
             NamedSharding(mesh, P(index_axes)),
             NamedSharding(mesh, P()),
         )

@@ -20,8 +20,8 @@ import numpy as np
 
 from .mesh import available_mesh
 from ..configs import get_config
-from ..core import E2LSHoS, measured_query, overall_ratio
-from ..core.distributed import build_sharded_index, sharded_query
+from ..core import E2LSHoS, SearchEngine, measured_query, overall_ratio
+from ..core.distributed import build_sharded_index
 from ..data import make_dataset
 from ..models import Model
 from ..serving import ServeEngine
@@ -35,20 +35,21 @@ def serve_ann(args):
         mesh = Mesh(np.array(jax.devices()), ("shard",))
         sh = build_sharded_index(ds.db, n_dev, gamma=args.gamma, max_L=args.max_L,
                                  seed=args.seed)
+        # one entry point, sharded plan: fused one-dispatch probe per device
+        engine = SearchEngine(sh, mesh=mesh)
         t0 = time.perf_counter()
-        ids, dists, nio, found = sharded_query(
-            sh, jnp.asarray(ds.queries), mesh, k=args.k)
-        jax.block_until_ready(ids)
+        res = engine.query(jnp.asarray(ds.queries), plan="sharded", k=args.k)
+        jax.block_until_ready(res.ids)
         dt = time.perf_counter() - t0
-        ratio = overall_ratio(np.asarray(dists), ds.gt_dists[:, :args.k])
+        ratio = overall_ratio(np.asarray(res.dists), ds.gt_dists[:, :args.k])
         print(f"[sharded x{n_dev}] ratio={ratio:.4f} "
-              f"nio/query={float(np.mean(np.asarray(nio))):.0f} "
+              f"nio/query={float(np.mean(np.asarray(res.nio))):.0f} "
               f"t/query={dt/args.queries*1e6:.0f}us")
         return
     idx = E2LSHoS.build(ds.db, gamma=args.gamma, max_L=args.max_L, seed=args.seed)
-    mq = measured_query(idx, ds.queries, k=args.k, engine=args.engine)
+    mq = measured_query(idx, ds.queries, k=args.k, plan=args.plan)
     ratio = overall_ratio(np.asarray(mq.result.dists), ds.gt_dists[:, :args.k])
-    print(f"[single/{args.engine}] ratio={ratio:.4f} nio/query={mq.nio_mean:.0f} "
+    print(f"[single/{args.plan}] ratio={ratio:.4f} nio/query={mq.nio_mean:.0f} "
           f"cands={mq.cands_mean:.0f} radii={mq.radii_mean:.2f} "
           f"t/query={mq.t_compute_per_query*1e6:.0f}us")
     fp = idx.footprint()
@@ -94,10 +95,11 @@ def serve_lm(args):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=("ann", "lm"), default="ann")
-    ap.add_argument("--engine", choices=("fused", "oracle", "host"),
-                    default="fused",
-                    help="query dispatch path: fused single-dispatch engine, "
-                         "unrolled oracle, or the pre-fusion host loop")
+    ap.add_argument("--plan", "--engine", dest="plan",
+                    choices=("fused", "oracle", "host"), default="fused",
+                    help="query execution plan: fused single-dispatch engine, "
+                         "unrolled oracle, or the pre-fusion host loop "
+                         "(multi-device runs use plan=sharded automatically)")
     ap.add_argument("--dataset", default="sift")
     ap.add_argument("--n", type=int, default=20000)
     ap.add_argument("--queries", type=int, default=64)

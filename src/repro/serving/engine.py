@@ -37,23 +37,23 @@ class ServeEngine:
 
     @staticmethod
     def make_retrieval_fn(index, *, k: int = 8, normalize: bool = True) -> Callable:
-        """Retrieval hook closing over the FUSED single-dispatch query engine.
+        """Retrieval hook closing over the FUSED single-dispatch query plan.
 
-        `index` is a core.E2LSHoS; the returned fn keeps the whole probe on
-        device (one dispatch per decode step, no host round-trip), so decode
-        streams are never stalled by per-radius syncs.
+        `index` is a core.E2LSHoS (or anything SearchEngine accepts); the
+        returned fn keeps the whole probe on device (one dispatch per decode
+        step, no host round-trip), so decode streams are never stalled by
+        per-radius syncs.
         """
-        from ..core.query import query_batch_fused
+        from ..core.query import SearchEngine
 
-        cfg = index.query_config(k=k)
-        arrays = index.fused_arrays(cfg.block_objs)
+        _, query_fn = SearchEngine(index).make_plan_fn(plan="fused", k=k)
 
         def retrieval_fn(hidden):
             h = hidden.astype(jnp.float32)
             if normalize:
                 h = h / jnp.maximum(
                     jnp.linalg.norm(h, axis=1, keepdims=True), 1e-9)
-            res = query_batch_fused(arrays, h, cfg)
+            res = query_fn(h)
             return res.ids, res.dists
 
         return retrieval_fn

@@ -22,13 +22,15 @@ def _run(code: str) -> dict:
     return json.loads(line)
 
 
-def test_sharded_index_matches_single():
+def test_sharded_plan_matches_single():
+    """`plan="sharded"` (fused local engine per device inside shard_map) on
+    8 shards agrees with the single-node engine at matched budgets."""
     res = _run("""
         import json
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import Mesh
-        from repro.core.distributed import build_sharded_index, sharded_query
-        from repro.core import E2LSHoS
+        from repro.core.distributed import build_sharded_index
+        from repro.core import E2LSHoS, SearchEngine
 
         rng = np.random.default_rng(1)
         n, d = 4000, 16
@@ -40,17 +42,65 @@ def test_sharded_index_matches_single():
 
         mesh = Mesh(np.array(jax.devices()).reshape(8), ("shard",))
         sh = build_sharded_index(db, 8, gamma=0.7, s_scale=2.0, max_L=16, seed=3)
-        ids, dists, nio, found = sharded_query(sh, jnp.asarray(q), mesh, k=1,
-                                               s_cap_per_shard=sh.params.S)
+        engine = SearchEngine(sh, mesh=mesh)
+        res = engine.query(jnp.asarray(q), plan="sharded", k=1,
+                           s_cap_per_shard=sh.params.S)
         single = E2LSHoS.build(db, gamma=0.7, s_scale=2.0, max_L=16, seed=3)
-        res = single.query(q, k=1, s_cap=single.params.S*8)
-        agree = float(np.mean(np.isclose(np.asarray(dists)[:,0],
-                                         np.asarray(res.dists)[:,0], rtol=1e-4)))
+        ref = single.query(q, k=1, s_cap=single.params.S*8)
+        agree = float(np.mean(np.isclose(np.asarray(res.dists)[:,0],
+                                         np.asarray(ref.dists)[:,0], rtol=1e-4)))
         print(json.dumps({"agree": agree,
-                          "found": float(np.mean(np.asarray(found)))}))
+                          "found": float(np.mean(np.asarray(res.found)))}))
     """)
     assert res["agree"] == 1.0
     assert res["found"] > 0.9
+
+
+def test_sharded_plan_matches_oracle_1_2_4_shards():
+    """Bit-exact parity: plan="sharded" (fused local engine over the padded
+    per-shard block stores) vs plan="oracle" (per-shard unrolled CSR
+    reference through the identical merge) on 1/2/4-shard meshes. n is
+    chosen NOT to divide evenly so entry/block/db padding at shard
+    boundaries is actually exercised (pad-and-mask correctness)."""
+    res = _run("""
+        import json
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core.distributed import build_sharded_index
+        from repro.core import SearchEngine
+
+        rng = np.random.default_rng(4)
+        n, d = 3001, 16   # odd n: uneven shards -> real padding
+        centers = rng.normal(size=(32, d)).astype(np.float32)
+        db = (centers[rng.integers(0, 32, n)] + 0.2*rng.normal(size=(n, d))).astype(np.float32)
+        q = (db[rng.choice(n, 16, replace=False)]
+             + 0.05*rng.normal(size=(16, d))).astype(np.float32)
+        db /= 2.0; q /= 2.0
+
+        fields = ("ids", "found", "radii_searched", "nio_table",
+                  "nio_blocks", "cands_checked")
+        out = {}
+        for sh_n in (1, 2, 4):
+            mesh = Mesh(np.array(jax.devices()[:sh_n]), ("shard",))
+            sh = build_sharded_index(db, sh_n, gamma=0.7, s_scale=2.0,
+                                     max_L=16, seed=3)
+            engine = SearchEngine(sh, mesh=mesh)
+            assert engine.plans == ("sharded", "oracle")
+            a = engine.query(jnp.asarray(q), plan="sharded", k=2)
+            b = engine.query(jnp.asarray(q), plan="oracle", k=2)
+            exact = all(
+                np.array_equal(np.asarray(getattr(a, f)),
+                               np.asarray(getattr(b, f)))
+                for f in fields)
+            exact = exact and np.array_equal(np.asarray(a.dists),
+                                             np.asarray(b.dists))
+            out[str(sh_n)] = dict(exact=bool(exact),
+                                  found=float(np.mean(np.asarray(a.found))))
+        print(json.dumps(out))
+    """)
+    for sh_n in ("1", "2", "4"):
+        assert res[sh_n]["exact"], f"{sh_n}-shard sharded/oracle parity broke"
+        assert res[sh_n]["found"] > 0.5
 
 
 def test_compressed_psum_dp_training():

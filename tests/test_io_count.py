@@ -47,6 +47,35 @@ def test_matches_runtime_walker(built_index, clustered_data):
     np.testing.assert_array_equal(replay, np.asarray(res.nio))
 
 
+def test_blockified_native_build_keeps_nio_model_inputs(built_index,
+                                                        clustered_data):
+    """The Eq. 6/7 model inputs must not drift under the blockified-native
+    build: the fused plan (reading the block store emitted at build time)
+    and the oracle plan (reading the CSR derived view) must report the same
+    table/block I/O counters AND the same probe trace, and both must agree
+    with the io_count replay at the paper's 512 B granularity."""
+    from repro.core import SearchEngine
+
+    engine = SearchEngine(built_index)
+    q = clustered_data["queries"]
+    p = built_index.params
+    fus = engine.query(q, plan="fused", k=1, collect_probe_sizes=True)
+    orc = engine.query(q, plan="oracle", k=1, collect_probe_sizes=True)
+    np.testing.assert_array_equal(np.asarray(fus.nio_table),
+                                  np.asarray(orc.nio_table))
+    np.testing.assert_array_equal(np.asarray(fus.nio_blocks),
+                                  np.asarray(orc.nio_blocks))
+    np.testing.assert_array_equal(np.asarray(fus.probe_sizes),
+                                  np.asarray(orc.probe_sizes))
+    replay = nio_for_block_size(np.asarray(fus.probe_sizes), s_cap=p.S,
+                                block_bytes=p.block_bytes)
+    np.testing.assert_array_equal(replay, np.asarray(fus.nio))
+    # N_io,inf (Table 4): 2 I/Os per non-empty probed bucket — exactly twice
+    # the walker's table-read counter, whichever layout served the probe
+    inf = nio_infinity(np.asarray(fus.probe_sizes))
+    np.testing.assert_array_equal(inf, 2 * np.asarray(fus.nio_table))
+
+
 def test_block_objs_for():
     assert block_objs_for(512) == 99
     assert block_objs_for(128) == (128 - 16) // 5

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import query_batch, query_batch_adaptive, overall_ratio
+from repro.core import SearchEngine, overall_ratio
 from repro.core.query import QueryConfig
 
 
@@ -85,10 +85,15 @@ def test_smaller_S_fewer_candidates(built_index, clustered_data):
     assert np.asarray(small.cands_checked).sum() <= np.asarray(big.cands_checked).sum()
 
 
-def test_query_batch_jits_under_vmapless_batching(built_index, clustered_data):
-    """query_batch is one jit-able graph (the TPU serving entry point)."""
-    cfg = built_index.query_config(k=1)
-    arrays = built_index.arrays()
-    fn = jax.jit(lambda qs: query_batch(arrays, qs, cfg))
-    out = fn(jnp.asarray(clustered_data["queries"][:8]))
-    assert out.ids.shape == (8, 1)
+def test_plan_bodies_jit_under_vmapless_batching(built_index, clustered_data):
+    """Both plan bodies are one jit-able graph over the typed IndexArrays
+    pytree (the TPU serving entry point composes them under an outer jit)."""
+    from repro.core.query import fused_plan_body, oracle_plan_body
+
+    engine = SearchEngine(built_index)
+    cfg = engine.config(k=1)
+    ix = engine.arrays(cfg.block_objs)
+    for body in (oracle_plan_body, fused_plan_body):
+        fn = jax.jit(lambda qs, body=body: body(ix, qs, cfg))
+        out = fn(jnp.asarray(clustered_data["queries"][:8]))
+        assert out.ids.shape == (8, 1)

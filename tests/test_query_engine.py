@@ -1,21 +1,23 @@
-"""Engine parity: the fused single-dispatch engine vs the unrolled oracle.
+"""Plan parity: every SearchEngine execution plan vs the unrolled oracle.
 
-The contract (docs/query_engine.md): on the same backend, `query_batch_fused`
-(precomputed all-radius hashes + blockified kernel-dispatch probes + while_loop
-early exit) must match `query_batch` (the unrolled reference) BIT-FOR-BIT on
-ids, dists, found, radii_searched and both I/O counters — including under the
-`s_cap` and `block_objs` override knobs. The pre-fusion host loop
-(`query_batch_adaptive_host`) must match as well: early exit only skips radii
-no query would use.
+The contract (docs/query_engine.md): on the same backend, `plan="fused"`
+(precomputed all-radius hashes + blockified kernel-dispatch probes +
+while_loop early exit, reading the block store `build_index` emitted
+natively) must match `plan="oracle"` (the unrolled reference) BIT-FOR-BIT on
+ids, dists, found, radii_searched and both I/O counters — including under
+the `s_cap` and `block_objs` override knobs. `plan="host"` (the pre-fusion
+per-radius host loop) must match as well: early exit only skips radii no
+query would use.
+
+The seed's free functions survive as deprecated wrappers for one PR; they
+are exercised here (and ONLY here) under pytest.deprecated_call.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (ensure_fused_arrays, make_query_fn, query_batch,
-                        query_batch_adaptive, query_batch_adaptive_host,
-                        query_batch_fused)
+from repro.core import IndexArrays, SearchEngine
 from repro.core.query import QueryConfig
 
 _EXACT_FIELDS = ("ids", "found", "radii_searched", "nio_table", "nio_blocks",
@@ -35,33 +37,38 @@ def _assert_identical(ref, fus, *, probe_sizes=False):
                                       np.asarray(fus.probe_sizes))
 
 
+@pytest.fixture(scope="module")
+def engine(built_index):
+    return SearchEngine(built_index)
+
+
 @pytest.mark.parametrize("k", [1, 8])
-def test_fused_matches_oracle(built_index, clustered_data, k):
+def test_fused_plan_matches_oracle(engine, clustered_data, k):
     q = clustered_data["queries"]
-    ref = built_index.query(q, k=k, engine="oracle")
-    fus = built_index.query(q, k=k, engine="fused")
+    ref = engine.query(q, plan="oracle", k=k)
+    fus = engine.query(q, plan="fused", k=k)
     _assert_identical(ref, fus)
 
 
-def test_adaptive_entry_point_is_fused(built_index, clustered_data):
-    """query_batch_adaptive (the public adaptive path) routes to the engine."""
+def test_default_plan_is_fused(engine, clustered_data):
+    """SearchEngine.query with no plan routes to the production fused plan."""
     q = clustered_data["queries"][:16]
-    cfg = built_index.query_config(k=3)
-    arrays = built_index.fused_arrays(cfg.block_objs)
-    a = query_batch_adaptive(arrays, jnp.asarray(q), cfg)
-    b = query_batch_fused(arrays, jnp.asarray(q), cfg)
+    a = engine.query(q, k=3)
+    b = engine.query(q, plan="fused", k=3)
     _assert_identical(a, b)
+    assert engine.default_plan == "fused"
+    assert engine.plans == ("fused", "host", "oracle")
 
 
-def test_host_loop_matches_fused(built_index, clustered_data):
+def test_host_plan_matches_fused(engine, clustered_data):
     """The pre-fusion per-radius host loop agrees with the engine. Its
     per-radius jit programs fuse float ops differently than the one-dispatch
     graph, so distances carry ulp-level noise (same contract the seed's
     test_adaptive_matches_full documented) — ids can swap only on near-ties;
     the algorithmic outputs (found/radii/I/O) stay exact."""
     q = clustered_data["queries"][:24]
-    host = built_index.query(q, k=3, engine="host")
-    fus = built_index.query(q, k=3, engine="fused")
+    host = engine.query(q, plan="host", k=3)
+    fus = engine.query(q, plan="fused", k=3)
     assert np.mean(np.asarray(host.ids) == np.asarray(fus.ids)) > 0.95
     np.testing.assert_allclose(np.asarray(host.dists), np.asarray(fus.dists),
                                rtol=1e-3, atol=1e-4)
@@ -73,66 +80,88 @@ def test_host_loop_matches_fused(built_index, clustered_data):
 
 
 @pytest.mark.parametrize("s_cap", [8, None])
-def test_fused_matches_oracle_with_s_cap(built_index, clustered_data, s_cap):
+def test_fused_matches_oracle_with_s_cap(engine, built_index, clustered_data, s_cap):
     q = clustered_data["queries"][:24]
     s = s_cap if s_cap is not None else built_index.params.S
-    ref = built_index.query(q, k=1, s_cap=s, engine="oracle")
-    fus = built_index.query(q, k=1, s_cap=s, engine="fused")
+    ref = engine.query(q, plan="oracle", k=1, s_cap=s)
+    fus = engine.query(q, plan="fused", k=1, s_cap=s)
     _assert_identical(ref, fus)
 
 
-def test_fused_matches_oracle_with_block_objs(built_index, clustered_data):
+def test_fused_matches_oracle_with_block_objs(engine, clustered_data):
     """The narrower-gather-chunk timing knob re-blockifies and stays exact."""
     q = clustered_data["queries"][:24]
-    ref = built_index.query(q, k=1, block_objs=16, engine="oracle")
-    fus = built_index.query(q, k=1, block_objs=16, engine="fused")
+    ref = engine.query(q, plan="oracle", k=1, block_objs=16)
+    fus = engine.query(q, plan="fused", k=1, block_objs=16)
     _assert_identical(ref, fus)
 
 
-def test_fused_probe_sizes_match_oracle(built_index, clustered_data):
+def test_fused_probe_sizes_match_oracle(engine, clustered_data):
     q = clustered_data["queries"][:16]
-    ref = built_index.query(q, k=1, collect_probe_sizes=True, engine="oracle")
-    fus = built_index.query(q, k=1, collect_probe_sizes=True, engine="fused")
+    ref = engine.query(q, plan="oracle", k=1, collect_probe_sizes=True)
+    fus = engine.query(q, plan="fused", k=1, collect_probe_sizes=True)
     _assert_identical(ref, fus, probe_sizes=True)
 
 
-def test_fused_engine_is_one_jitted_dispatch(built_index, clustered_data):
-    """The fused engine lowers to ONE jitted computation: tracing its jit
-    wrapper once covers the whole radius schedule (no per-radius retrace), and
-    it jits from inside an outer jit (serving composes it)."""
-    cfg = built_index.query_config(k=1)
-    arrays = built_index.fused_arrays(cfg.block_objs)
-    jit_arrays = {k: v for k, v in arrays.items() if not k.startswith("_")}
-    from repro.core.query import _query_batch_fused_jit
+def test_unknown_plan_rejected(engine, clustered_data):
+    with pytest.raises(ValueError, match="unknown plan"):
+        engine.query(clustered_data["queries"][:2], plan="warp")
+    with pytest.raises(ValueError, match="unknown plan"):
+        engine.make_plan_fn(plan="warp")
+
+
+def test_fused_plan_is_one_jitted_dispatch(engine, clustered_data):
+    """The fused plan lowers to ONE jitted computation over the typed
+    IndexArrays pytree: tracing its jit wrapper once covers the whole radius
+    schedule (no per-radius retrace), and it jits from inside an outer jit
+    (serving composes it)."""
+    cfg = engine.config(k=1)
+    ix = engine.arrays(cfg.block_objs)
+    from repro.core.query import _fused_jit
     q = jnp.asarray(clustered_data["queries"][:8])
-    lowered = _query_batch_fused_jit.lower(jit_arrays, q, cfg)
+    lowered = _fused_jit.lower(ix, q, cfg)
     text = lowered.as_text()
     assert "while" in text  # radius loop is a device-side while_loop
-    out = _query_batch_fused_jit(jit_arrays, q, cfg)
+    out = _fused_jit(ix, q, cfg)
     assert out.ids.shape == (8, 1)
 
 
-def test_make_query_fn_engine_selection(built_index, clustered_data):
+def test_make_plan_fn_closures(engine, clustered_data):
     q = jnp.asarray(clustered_data["queries"][:8])
-    cfg_f, fn_f = make_query_fn(built_index.params, k=2, engine="fused")
-    cfg_o, fn_o = make_query_fn(built_index.params, k=2, engine="oracle")
+    cfg_f, fn_f = engine.make_plan_fn(plan="fused", k=2)
+    cfg_o, fn_o = engine.make_plan_fn(plan="oracle", k=2)
     assert cfg_f == cfg_o
-    arrays = built_index.fused_arrays(cfg_f.block_objs)
-    _assert_identical(fn_o(arrays, q), fn_f(arrays, q))
+    _assert_identical(fn_o(q), fn_f(q))
 
 
-def test_ensure_fused_arrays_idempotent(built_index):
-    arrays = built_index.arrays()
-    bo = built_index.params.block_objs
-    a1 = ensure_fused_arrays(arrays, bo)
-    a2 = ensure_fused_arrays(a1, bo)
-    assert a2 is a1  # an already-augmented dict is returned untouched
-    assert "ids_blocks" in a1 and "blocks_head" in a1
-    # repeated functional-API calls with the same source dict blockify once
-    assert ensure_fused_arrays(arrays, bo) is a1
-    assert ensure_fused_arrays(arrays, 16) is ensure_fused_arrays(arrays, 16)
-    # the source dict gains only the private cache, not the layout itself
-    assert "ids_blocks" not in arrays
+def test_native_blockified_arrays_memoized(engine, built_index):
+    """`build_index` emits the blockified layout natively — the engine's base
+    arrays ARE the index arrays (no repack), and the `block_objs` knob
+    re-blockifies once per size."""
+    base = engine.arrays()
+    assert base is built_index.index.arrays
+    assert base.block_objs == built_index.params.block_objs
+    narrow = engine.arrays(16)
+    assert narrow.block_objs == 16
+    assert engine.arrays(16) is narrow                  # memoized
+    assert engine.arrays(base.block_objs) is base
+    # the repack reads the CSR derived view: same entries, new rows
+    assert narrow.ids_blocks.shape[1] != base.ids_blocks.shape[1] or \
+        narrow.ids_blocks.shape[0] != base.ids_blocks.shape[0]
+
+
+def test_index_arrays_is_a_pytree(engine):
+    """IndexArrays crosses jit boundaries as a pytree: array leaves flatten,
+    layout metadata rides the treedef (static -> part of jit cache keys)."""
+    ix = engine.arrays()
+    leaves, treedef = jax.tree_util.tree_flatten(ix)
+    assert len(leaves) == len(IndexArrays.array_fields())
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rebuilt.block_objs == ix.block_objs
+    assert rebuilt.lane_pad == ix.lane_pad
+    # a re-blockified index is a DIFFERENT treedef: no stale jit-cache hits
+    _, treedef16 = jax.tree_util.tree_flatten(ix.with_block_objs(16))
+    assert treedef16 != treedef
 
 
 def test_queryconfig_replace_constructor_path():
@@ -148,3 +177,54 @@ def test_queryconfig_replace_constructor_path():
     assert both.S == 32 and both.max_chain == 3 and both.sbuf == 128
     # frozen dataclass: the original is untouched
     assert cfg.S == 96 and cfg.block_objs == 99
+
+
+# --------------------------------------------------------------------------
+# Deprecated wrappers: still correct, still warning, for exactly one PR.
+# pytest.ini turns repro-internal DeprecationWarnings into errors, so these
+# wrappers cannot be reached from inside src/repro — only via this suite.
+# --------------------------------------------------------------------------
+
+def test_deprecated_wrappers_warn_and_match(engine, built_index, clustered_data):
+    from repro.core import (ensure_fused_arrays, make_query_fn, query_batch,
+                            query_batch_adaptive, query_batch_adaptive_host,
+                            query_batch_fused)
+    q = jnp.asarray(clustered_data["queries"][:8])
+    cfg = engine.config(k=2)
+    ix = engine.arrays(cfg.block_objs)
+    ref = engine.query(q, plan="oracle", k=2)
+
+    with pytest.deprecated_call():
+        legacy_dict = ensure_fused_arrays(built_index.index.arrays.as_dict(),
+                                          cfg.block_objs)
+    assert "ids_blocks" in legacy_dict
+    for fn, exact in ((query_batch, True), (query_batch_fused, True),
+                      (query_batch_adaptive, True),
+                      (query_batch_adaptive_host, False)):
+        with pytest.deprecated_call():
+            out = fn(legacy_dict, q, cfg)
+        if exact:
+            _assert_identical(ref, out)
+        else:
+            assert np.mean(np.asarray(out.ids) == np.asarray(ref.ids)) > 0.95
+    # wrappers also accept the typed pytree directly
+    with pytest.deprecated_call():
+        out = query_batch_fused(ix, q, cfg)
+    _assert_identical(ref, out)
+    with pytest.deprecated_call():
+        mq_cfg, mq_fn = make_query_fn(built_index.params, k=2, engine="fused")
+    assert mq_cfg == cfg
+    _assert_identical(ref, mq_fn(ix, q))
+
+
+def test_deprecated_e2lshos_accessors_warn(built_index, clustered_data):
+    with pytest.deprecated_call():
+        d = built_index.arrays()
+    assert "table_off" in d and "ids_blocks" in d
+    with pytest.deprecated_call():
+        d2 = built_index.fused_arrays()
+    assert "ids_blocks" in d2
+    with pytest.deprecated_call():
+        built_index.index.as_arrays()
+    with pytest.deprecated_call():
+        built_index.query(clustered_data["queries"][:2], engine="oracle")

@@ -57,7 +57,7 @@ def test_make_retrieval_fn_closes_over_fused_engine():
     ids, dists = hook(h)
     assert ids.shape == (6, 4) and dists.shape == (6, 4)
     hn = h / jnp.maximum(jnp.linalg.norm(h, axis=1, keepdims=True), 1e-9)
-    direct = idx.query(hn, k=4, engine="fused")
+    direct = idx.query(hn, k=4, plan="fused")
     np.testing.assert_array_equal(np.asarray(ids), np.asarray(direct.ids))
 
 
