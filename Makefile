@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify test bench-query bench-smoke deprecation-lane deps
+.PHONY: verify test bench-query bench-smoke deprecation-lane kernel-lane deps
 
 deps:
 	$(PY) -m pip install -r requirements.txt
@@ -21,11 +21,30 @@ bench-query:
 bench-smoke:
 	$(PY) benchmarks/bench_query_engine.py --smoke
 
-# import-time firewall: importing the repro surface must not touch any
-# deprecated wrapper. The filter is scoped to repro.* (same contract as
-# pytest.ini) so third-party import-time deprecations can't fail the lane.
+# deprecation firewall, phase 2: the one-PR legacy wrappers are DELETED —
+# assert the names stay gone from every public surface (and keep the
+# import-time DeprecationWarning escalation for anything new).
 deprecation-lane:
 	$(PY) -c "import warnings; \
 	warnings.filterwarnings('error', category=DeprecationWarning, module=r'repro\..*'); \
 	import repro, repro.core, repro.core.distributed, repro.serving, \
-	repro.launch.serve, repro.launch.dryrun"
+	repro.launch.serve, repro.launch.dryrun; \
+	import repro.core as c, repro.core.query as q, repro.core.index as i, repro.core.distributed as d; \
+	gone = ['query_batch', 'query_batch_fused', 'query_batch_adaptive', \
+	'query_batch_adaptive_host', 'ensure_fused_arrays', 'make_query_fn']; \
+	leaked = [n for n in gone if hasattr(c, n) or hasattr(q, n)]; \
+	leaked += ['sharded_query'] if hasattr(d, 'sharded_query') else []; \
+	leaked += ['IndexArrays.from_dict'] if hasattr(i.IndexArrays, 'from_dict') else []; \
+	leaked += ['IndexArrays.as_dict'] if hasattr(i.IndexArrays, 'as_dict') else []; \
+	leaked += ['E2LSHIndex.as_arrays'] if hasattr(i.E2LSHIndex, 'as_arrays') else []; \
+	leaked += ['E2LSHoS.arrays'] if hasattr(c.E2LSHoS, 'arrays') else []; \
+	leaked += ['E2LSHoS.fused_arrays'] if hasattr(c.E2LSHoS, 'fused_arrays') else []; \
+	assert not leaked, f'deprecated names resurfaced: {leaked}'; \
+	print('deprecation lane OK: legacy wrapper names are gone')"
+
+# multi-backend kernel lane (ROADMAP "Multi-backend CI"): pin the Pallas
+# kernel path on this backend (interpret mode off-TPU) and run the three
+# kernel ops end to end through the fused plan + the queue parity check.
+kernel-lane:
+	REPRO_FORCE_PALLAS=interpret $(PY) -m pytest \
+	tests/test_kernels.py tests/test_force_pallas_lane.py -q

@@ -9,11 +9,7 @@ from .probabilities import (
 from .hashing import (HashFamily, make_hash_family, hash_points_radius,
                       hash_points_radius_deterministic)
 from .index import E2LSHIndex, IndexArrays, IndexStats, build_index
-from .query import (QueryConfig, QueryResult, SearchEngine,
-                    # deprecated wrappers (one-PR migration shims)
-                    ensure_fused_arrays, make_query_fn, query_batch,
-                    query_batch_adaptive, query_batch_adaptive_host,
-                    query_batch_fused)
+from .query import QueryConfig, QueryResult, SearchEngine
 from .e2lshos import E2LSHoS, measured_query
 from .tuning import overall_ratio, tune_gamma
 from . import io_count, storage
@@ -24,9 +20,6 @@ __all__ = [
     "hash_points_radius_deterministic",
     "E2LSHIndex", "IndexArrays", "IndexStats", "build_index",
     "QueryConfig", "QueryResult", "SearchEngine",
-    "query_batch", "query_batch_fused",
-    "query_batch_adaptive", "query_batch_adaptive_host", "ensure_fused_arrays",
-    "make_query_fn",
     "E2LSHoS", "measured_query", "overall_ratio", "tune_gamma",
     "io_count", "storage",
 ]

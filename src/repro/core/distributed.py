@@ -28,7 +28,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
 from typing import Optional, Sequence
 
 import jax
@@ -43,7 +42,7 @@ from .probabilities import LSHParams, solve_params
 from .query import QueryConfig, QueryResult, fused_plan_body, oracle_plan_body
 
 __all__ = ["ShardedIndexArrays", "build_sharded_index", "sharded_query_result",
-           "sharded_query", "make_sharded_query_fn"]
+           "make_sharded_query_fn"]
 
 _INVALID = np.int32(2**31 - 1)
 
@@ -166,17 +165,19 @@ def _local_view(ix: IndexArrays) -> IndexArrays:
     )
 
 
-def _local_shard_query(local: IndexArrays, shard_off, queries,
+def _local_shard_query(local: IndexArrays, shard_off, queries, valid,
                        cfg: QueryConfig, index_axes: tuple, k: int,
                        local_plan: str):
     """Runs inside shard_map: local plan body + cross-shard top-k merge.
 
     `local_plan="fused"` dispatches the production single-dispatch engine on
     the shard's blockified store; `"oracle"` runs the unrolled CSR reference
-    through the identical merge (the sharded parity target).
+    through the identical merge (the sharded parity target). `valid` masks
+    padded serving rows — inert on every shard, so the merged result rows
+    are INVALID/inf with zero aggregate I/O.
     """
     body = fused_plan_body if local_plan == "fused" else oracle_plan_body
-    res = body(local, queries, cfg)
+    res = body(local, queries, cfg, valid)
     ids = jnp.where(res.ids == jnp.int32(_INVALID), jnp.int32(_INVALID),
                     res.ids + shard_off)
     d2 = jnp.where(jnp.isinf(res.dists), jnp.inf, res.dists ** 2)
@@ -221,13 +222,15 @@ def sharded_query_result(
     s_cap: Optional[int] = None,
     s_cap_per_shard: Optional[int] = None,
     local_plan: str = "fused",
+    valid: Optional[jnp.ndarray] = None,
 ) -> QueryResult:
     """shard_map query over `mesh`, returning a full merged `QueryResult`.
 
     Index over `index_axes`, query batch over `query_axes`. This is the
     execution body behind ``SearchEngine(sharded, mesh=...).query(qs,
     plan="sharded"|"oracle")``; `probe_sizes` is not collected under
-    shard_map.
+    shard_map. `valid` [Q] bool masks padded serving rows (replicated like
+    the query batch unless `query_axes` shards it).
     """
     if local_plan not in ("fused", "oracle"):
         raise ValueError(f"unknown local_plan {local_plan!r}")
@@ -241,45 +244,26 @@ def sharded_query_result(
     base_S = int(s_cap or p.S)
     cap = s_cap_per_shard or max(4 * k, -(-base_S // sharded.num_shards))
     cfg = QueryConfig.from_params(p, k=k).replace(s_cap=int(cap))
+    if valid is None:
+        valid = jnp.ones((queries.shape[0],), dtype=bool)
 
     qspec = P(query_axes if query_axes else None)
-    in_specs = (sharded.specs(index_axes), P(index_axes), qspec)
+    in_specs = (sharded.specs(index_axes), P(index_axes), qspec, qspec)
     out_specs = (qspec,) * 7
 
-    def body(ix, shard_off, qs):
-        return _local_shard_query(_local_view(ix), shard_off[0], qs, cfg,
+    def body(ix, shard_off, qs, ok):
+        return _local_shard_query(_local_view(ix), shard_off[0], qs, ok, cfg,
                                   index_axes, k, local_plan)
 
     fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     ids, dists, found, radii, nio_t, nio_b, cands = fn(
-        sharded.arrays, sharded.shard_offsets, queries.astype(jnp.float32))
+        sharded.arrays, sharded.shard_offsets, queries.astype(jnp.float32),
+        valid.astype(bool))
     return QueryResult(
         ids=ids, dists=dists, found=found, radii_searched=radii,
         nio_table=nio_t, nio_blocks=nio_b, cands_checked=cands,
         probe_sizes=None,
     )
-
-
-def sharded_query(
-    sharded: ShardedIndexArrays,
-    queries: jnp.ndarray,
-    mesh: Mesh,
-    *,
-    k: int = 1,
-    index_axes: Sequence[str] = ("shard",),
-    query_axes: Sequence[str] = (),
-    s_cap_per_shard: Optional[int] = None,
-):
-    """DEPRECATED tuple-returning wrapper; use
-    ``SearchEngine(sharded, mesh=...).query(qs, plan="sharded")`` (or
-    `sharded_query_result` directly). Returns (ids, dists, nio, found)."""
-    warnings.warn("sharded_query is deprecated; use SearchEngine(sharded, "
-                  "mesh=...).query(qs, plan=\"sharded\") — it returns a full "
-                  "QueryResult", DeprecationWarning, stacklevel=2)
-    res = sharded_query_result(
-        sharded, queries, mesh, k=k, index_axes=index_axes,
-        query_axes=query_axes, s_cap_per_shard=s_cap_per_shard)
-    return res.ids, res.dists, res.nio, res.found
 
 
 def make_sharded_query_fn(sharded: ShardedIndexArrays, mesh: Mesh, **kw):

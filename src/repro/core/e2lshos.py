@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Optional
 
 import jax
@@ -107,22 +106,6 @@ class E2LSHoS:
         memoized when the `block_objs` timing knob differs)."""
         return self.engine.arrays(block_objs)
 
-    def arrays(self) -> dict:
-        """DEPRECATED flat-dict view; use ``index_arrays()``."""
-        warnings.warn("E2LSHoS.arrays() is deprecated; use the typed "
-                      "E2LSHoS.index_arrays()", DeprecationWarning,
-                      stacklevel=2)
-        return self.index_arrays().as_dict()
-
-    def fused_arrays(self, block_objs: Optional[int] = None) -> dict:
-        """DEPRECATED: the build emits the blockified layout natively; use
-        ``index_arrays(block_objs)``."""
-        warnings.warn("E2LSHoS.fused_arrays() is deprecated; build_index "
-                      "emits blockified IndexArrays natively — use "
-                      "E2LSHoS.index_arrays(block_objs)", DeprecationWarning,
-                      stacklevel=2)
-        return self.index_arrays(block_objs).as_dict()
-
     # -- querying ----------------------------------------------------------
     def query_config(self, *, k: int = 1, collect_probe_sizes: bool = False,
                      s_cap: Optional[int] = None, max_chain: int = 0,
@@ -132,24 +115,20 @@ class E2LSHoS:
             max_chain=max_chain, block_objs=block_objs)
 
     def query(self, queries, *, k: int = 1, adaptive: bool = True,
-              plan: Optional[str] = None, engine: Optional[str] = None,
+              plan: Optional[str] = None,
               collect_probe_sizes: bool = False, s_cap: Optional[int] = None,
-              block_objs: Optional[int] = None) -> QueryResult:
+              block_objs: Optional[int] = None, valid=None) -> QueryResult:
         """Run a query batch through the SearchEngine.
 
         plan: "fused" (single-dispatch while_loop engine), "oracle"
         (unrolled reference), or "host" (pre-fusion per-radius host loop,
         kept for benchmarking). Default: fused when `adaptive` else oracle.
         """
-        if engine is not None:
-            warnings.warn("E2LSHoS.query(engine=...) is deprecated; use "
-                          "plan=...", DeprecationWarning, stacklevel=2)
-            plan = plan or engine
         if plan is None:
             plan = "fused" if adaptive else "oracle"
         return self.engine.query(
             queries, plan=plan, k=k, collect_probe_sizes=collect_probe_sizes,
-            s_cap=s_cap, block_objs=block_objs)
+            s_cap=s_cap, block_objs=block_objs, valid=valid)
 
     # -- accounting (Table 6) ----------------------------------------------
     def footprint(self) -> MemoryFootprint:
@@ -181,18 +160,13 @@ class E2LSHoS:
 def measured_query(idx: E2LSHoS, queries, *, k: int = 1, repeats: int = 3,
                    collect_probe_sizes: bool = False,
                    block_objs: Optional[int] = None,
-                   plan: Optional[str] = None,
-                   engine: Optional[str] = None) -> MeasuredQuery:
+                   plan: Optional[str] = None) -> MeasuredQuery:
     """Run a query plan and measure wall time per query on this host.
 
     The first call includes compile; we time subsequent repeats. `plan`
     selects the dispatch path (None -> fused; "host" re-measures the
     pre-fusion per-radius loop for comparison).
     """
-    if engine is not None:
-        warnings.warn("measured_query(engine=...) is deprecated; use plan=...",
-                      DeprecationWarning, stacklevel=2)
-        plan = plan or engine
     queries = jnp.asarray(queries)
     kw = dict(k=k, collect_probe_sizes=collect_probe_sizes,
               block_objs=block_objs, plan=plan)

@@ -122,51 +122,6 @@ class IndexArrays:
             block_objs=int(block_objs), lane_pad=lp,
         )
 
-    @staticmethod
-    def from_dict(arrays: dict, block_objs: int,
-                  lane_pad: Optional[int] = None) -> "IndexArrays":
-        """Adopt a legacy ``arrays: dict`` (deprecated-wrapper migration).
-
-        If the dict already carries a matching blockified layout it is
-        reused; otherwise the CSR view is blockified. The result is memoized
-        on the dict (private key) so repeated wrapper calls convert once.
-        """
-        cache = arrays.get("_ix_cache") if isinstance(arrays, dict) else None
-        if cache is not None and block_objs in cache:
-            return cache[block_objs]
-        have_blocks = (
-            all(k in arrays for k in ("ids_blocks", "fps_blocks", "blocks_head"))
-            and arrays.get("_blockified_objs", block_objs) == block_objs)
-        db = arrays["db"]
-        db_norm2 = arrays.get("db_norm2")
-        if db_norm2 is None:
-            db_norm2 = jnp.sum(jnp.asarray(db, jnp.float32) ** 2, axis=-1)
-        if have_blocks:
-            # the alignment, NOT the padded row width BLKp (ids_blocks.shape[1]
-            # = block_objs rounded up to lane_pad): conflating them would make
-            # a later with_block_objs() pack tiny blocks into BLKp-wide rows
-            lp = int(arrays.get("_lane_pad", native_lane_pad()))
-            ix = IndexArrays(
-                a=arrays["a"], b=arrays["b"], rm=arrays["rm"],
-                ids_blocks=arrays["ids_blocks"], fps_blocks=arrays["fps_blocks"],
-                blocks_head=arrays["blocks_head"],
-                table_off=arrays["table_off"], table_cnt=arrays["table_cnt"],
-                entries_id=arrays["entries_id"], entries_fp=arrays["entries_fp"],
-                db=db, db_norm2=db_norm2,
-                block_objs=int(block_objs), lane_pad=lp,
-            )
-        else:
-            ix = IndexArrays.from_csr(
-                a=arrays["a"], b=arrays["b"], rm=arrays["rm"],
-                table_off=arrays["table_off"], table_cnt=arrays["table_cnt"],
-                entries_id=arrays["entries_id"], entries_fp=arrays["entries_fp"],
-                db=db, db_norm2=db_norm2, block_objs=block_objs,
-                lane_pad=lane_pad,
-            )
-        if isinstance(arrays, dict):
-            arrays.setdefault("_ix_cache", {})[block_objs] = ix
-        return ix
-
     def with_block_objs(self, block_objs: int,
                         lane_pad: Optional[int] = None) -> "IndexArrays":
         """Re-blockify under a different block size (the timing knob). The
@@ -182,13 +137,6 @@ class IndexArrays:
             db=self.db, db_norm2=self.db_norm2,
             block_objs=int(block_objs), lane_pad=lp,
         )
-
-    def as_dict(self) -> dict:
-        """Legacy flat-dict view (deprecated-wrapper compatibility)."""
-        out = {name: getattr(self, name) for name in self.array_fields()}
-        out["_blockified_objs"] = self.block_objs
-        out["_lane_pad"] = self.lane_pad
-        return out
 
 
 @dataclasses.dataclass
@@ -236,14 +184,6 @@ class E2LSHIndex:
     @property
     def db(self) -> jnp.ndarray:
         return self.arrays.db
-
-    def as_arrays(self) -> dict:
-        """DEPRECATED flat-dict view; use the typed ``.arrays`` pytree."""
-        import warnings
-        warnings.warn("E2LSHIndex.as_arrays() is deprecated; use the typed "
-                      "IndexArrays pytree at E2LSHIndex.arrays",
-                      DeprecationWarning, stacklevel=2)
-        return self.arrays.as_dict()
 
     # The checkpoint persists the CSR source of truth + layout metadata only:
     # the lane-padded block store is ~2.7x the CSR bytes and blockify_entries

@@ -49,16 +49,19 @@ instead of bucket-sequential; both orders examine an arbitrary S-subset of
 candidates, and round-robin is the batched-gather (queue-depth-maximizing)
 order on TPU. The S cap still truncates chains mid-bucket.
 
-The seed's free functions (`query_batch`, `query_batch_fused`,
-`query_batch_adaptive`, `query_batch_adaptive_host`, `ensure_fused_arrays`,
-`make_query_fn`) remain as thin DEPRECATED wrappers for one PR; internal
-call sites must use `SearchEngine` (the test suite turns repro-internal
-DeprecationWarnings into errors).
+Serving front-ends (serving.BatchQueue) dispatch PADDED batches: every plan
+accepts an optional per-query ``valid`` mask, and masked rows are **inert**
+— they start in the done state, probe nothing, count zero I/O, and report
+``found=False`` / INVALID ids — so a padded tick is bit-exact with
+dispatching each real request alone (the queue's parity contract).
+
+The seed's free-function surface (`query_batch*`, `ensure_fused_arrays`,
+`make_query_fn`) was deprecated for exactly one PR and is now DELETED;
+`make deprecation-lane` asserts the names stay gone.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from functools import partial
 from typing import Optional
 
@@ -74,12 +77,7 @@ from ..kernels.dispatch import on_tpu
 from ..kernels.l2_distance.ops import l2_distance_gathered
 from ..kernels.lsh_hash.ops import lsh_hash_all_radii
 
-__all__ = [
-    "QueryConfig", "QueryResult", "SearchEngine",
-    # deprecated wrappers (one-PR migration shims)
-    "query_batch", "query_batch_fused", "query_batch_adaptive",
-    "query_batch_adaptive_host", "ensure_fused_arrays", "make_query_fn",
-]
+__all__ = ["QueryConfig", "QueryResult", "SearchEngine"]
 
 _INVALID = np.int32(2**31 - 1)
 
@@ -151,6 +149,30 @@ class QueryResult:
     def nio(self) -> jnp.ndarray:
         """Total I/O count per query, N_io (paper Sec. 4.3)."""
         return self.nio_table + self.nio_blocks
+
+    # -- row algebra (the serving queue's scatter/gather) -------------------
+    def slice_rows(self, lo: int, hi: int) -> "QueryResult":
+        """Rows [lo, hi) as a standalone result. Mask-aware by construction:
+        padded rows of a queued tick are inert (zero counters, unprobed
+        trace), so slicing the real rows back out IS the per-request result
+        — there is nothing to renormalize."""
+        take = lambda x: None if x is None else x[lo:hi]
+        return QueryResult(**{f.name: take(getattr(self, f.name))
+                              for f in dataclasses.fields(QueryResult)})
+
+    @staticmethod
+    def concat_rows(parts: "list[QueryResult]") -> "QueryResult":
+        """Stitch row slices back into one result (a queued request whose
+        segments spilled across ticks). Host-side: leaves come back as
+        numpy (the queue device_gets each tick once; per-segment device
+        slicing would cost more than the dispatch itself)."""
+        if len(parts) == 1:
+            return parts[0]
+        cat = (lambda vs: None if any(v is None for v in vs)
+               else np.concatenate([np.asarray(v) for v in vs], axis=0))
+        return QueryResult(**{
+            f.name: cat([getattr(p, f.name) for p in parts])
+            for f in dataclasses.fields(QueryResult)})
 
 
 def _hash_queries(q, a_t, b_t, rm_t, wr, u, fp_bits):
@@ -363,16 +385,23 @@ def _radius_step(ix, queries, qnorm2, state, t, radius, cfg: QueryConfig):
     return _update_state(state, cid, cd2, st, t, thresh, cfg)
 
 
-def _init_state(Q, cfg: QueryConfig):
+def _init_state(Q, cfg: QueryConfig, valid=None):
+    """Fresh per-query search state. Masked (padded) rows start DONE, which
+    makes them inert everywhere downstream: `active_q = ~done` gates the
+    probes, the I/O counters, the probe trace, and the while_loop early
+    exit, so a padding row never reads a bucket and never holds a tick
+    open past the real queries' schedule."""
     r = len(cfg.radii)
     probe_sizes = (
         jnp.full((Q, r, cfg.L), -1, dtype=jnp.int32) if cfg.collect_probe_sizes
         else jnp.zeros((0,), dtype=jnp.int32)
     )
+    done0 = (jnp.zeros((Q,), dtype=bool) if valid is None
+             else ~valid.astype(bool))
     return (
         jnp.full((Q, cfg.k), _INVALID, dtype=jnp.int32),
         jnp.full((Q, cfg.k), jnp.inf, dtype=jnp.float32),
-        jnp.zeros((Q,), dtype=bool),
+        done0,
         jnp.zeros((Q,), dtype=jnp.int32),
         jnp.zeros((Q,), dtype=jnp.int32),
         jnp.zeros((Q,), dtype=jnp.int32),
@@ -381,12 +410,13 @@ def _init_state(Q, cfg: QueryConfig):
     )
 
 
-def _result_from_state(state, cfg) -> QueryResult:
+def _result_from_state(state, cfg, valid=None) -> QueryResult:
     (best_id, best_d2, done, radii_searched, nio_t, nio_b, cands, probe_sizes) = state
+    found = done if valid is None else done & valid.astype(bool)
     return QueryResult(
         ids=best_id,
         dists=jnp.sqrt(best_d2),
-        found=done,
+        found=found,
         radii_searched=radii_searched,
         nio_table=nio_t,
         nio_blocks=nio_b,
@@ -398,6 +428,30 @@ def _result_from_state(state, cfg) -> QueryResult:
 def _prep_queries(queries):
     queries = queries.astype(jnp.float32)
     return queries, jnp.sum(queries * queries, axis=-1)
+
+
+# XLA lowers a Q=1 batch's contractions as a matvec whose accumulation order
+# differs from the gemm every Q>=2 shape shares, so a lone query's hashes and
+# distances would not be bit-identical with the same row inside a padded
+# serving tick. Dispatching Q=1 as a masked Q=2 keeps every plan on the
+# row-stable gemm path — the shape-independence the queue's parity contract
+# (queued == direct, any ladder rung) is built on; tests/test_serving_queue
+# pins it across the whole ladder.
+_MIN_DISPATCH_Q = 2
+
+
+def _pad_min_q(queries, valid):
+    """Pad a sub-minimum batch with masked rows. Returns (queries, valid,
+    real_Q); real_Q is static under jit, so callers slice at trace time."""
+    Q = queries.shape[0]
+    if Q >= _MIN_DISPATCH_Q:
+        return queries, valid, Q
+    pad = _MIN_DISPATCH_Q - Q
+    queries = jnp.concatenate(
+        [queries, jnp.zeros((pad,) + queries.shape[1:], queries.dtype)])
+    v = jnp.ones((Q,), dtype=bool) if valid is None else valid.astype(bool)
+    valid = jnp.concatenate([v, jnp.zeros((pad,), dtype=bool)])
+    return queries, valid, Q
 
 
 def _fused_sbuf(cfg: QueryConfig) -> int:
@@ -418,18 +472,20 @@ def _fused_sbuf(cfg: QueryConfig) -> int:
 # --------------------------------------------------------------------------
 
 def oracle_plan_body(ix: IndexArrays, queries: jnp.ndarray,
-                     cfg: QueryConfig) -> QueryResult:
+                     cfg: QueryConfig, valid=None) -> QueryResult:
     """Reference ORACLE plan: all radii unrolled with done-masking, CSR
-    gathers. jit-able and shard_map-able; every other plan must match it."""
+    gathers. jit-able and shard_map-able; every other plan must match it.
+    `valid` [Q] bool masks padded serving rows (inert: see _init_state)."""
+    queries, valid, realQ = _pad_min_q(queries, valid)
     queries, qnorm2 = _prep_queries(queries)
-    state = _init_state(queries.shape[0], cfg)
+    state = _init_state(queries.shape[0], cfg, valid)
     for t, radius in enumerate(cfg.radii):
         state = _radius_step(ix, queries, qnorm2, state, t, float(radius), cfg)
-    return _result_from_state(state, cfg)
+    return _result_from_state(state, cfg, valid).slice_rows(0, realQ)
 
 
 def fused_plan_body(ix: IndexArrays, queries: jnp.ndarray,
-                    cfg: QueryConfig) -> QueryResult:
+                    cfg: QueryConfig, valid=None) -> QueryResult:
     """FUSED plan: precomputed all-radius hashes + table lookups, blockified
     kernel-backed probes, device-side while_loop early exit. Consumes the
     block store the build emitted natively."""
@@ -439,6 +495,7 @@ def fused_plan_body(ix: IndexArrays, queries: jnp.ndarray,
             f"query plan wants {cfg.block_objs}; re-blockify with "
             "IndexArrays.with_block_objs (SearchEngine does this "
             "automatically)")
+    queries, valid, realQ = _pad_min_q(queries, valid)
     queries, qnorm2 = _prep_queries(queries)
     Q = queries.shape[0]
     r = len(cfg.radii)
@@ -458,7 +515,7 @@ def fused_plan_body(ix: IndexArrays, queries: jnp.ndarray,
     head_all = jnp.take(ix.blocks_head.reshape(-1), flat_all, axis=0)
     thresh2 = jnp.asarray([(cfg.c * float(rad)) ** 2 for rad in cfg.radii],
                           jnp.float32)
-    state0 = _init_state(Q, cfg)
+    state0 = _init_state(Q, cfg, valid)
 
     def cond(carry):
         t, state = carry
@@ -476,7 +533,7 @@ def fused_plan_body(ix: IndexArrays, queries: jnp.ndarray,
         return t + 1, state
 
     _, state = jax.lax.while_loop(cond, body, (jnp.int32(0), state0))
-    return _result_from_state(state, cfg)
+    return _result_from_state(state, cfg, valid).slice_rows(0, realQ)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -489,6 +546,21 @@ def _fused_jit(ix: IndexArrays, queries, cfg: QueryConfig) -> QueryResult:
     return fused_plan_body(ix, queries, cfg)
 
 
+# masked variants: the serving queue's dispatch targets. Separate jit
+# wrappers (not a None default on the plain ones) so the unmasked entry
+# points keep their argument treedefs — and their compile caches — unchanged.
+@partial(jax.jit, static_argnames=("cfg",))
+def _oracle_masked_jit(ix: IndexArrays, queries, valid,
+                       cfg: QueryConfig) -> QueryResult:
+    return oracle_plan_body(ix, queries, cfg, valid)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _fused_masked_jit(ix: IndexArrays, queries, valid,
+                      cfg: QueryConfig) -> QueryResult:
+    return fused_plan_body(ix, queries, cfg, valid)
+
+
 @partial(jax.jit, static_argnames=("cfg", "t_static"))
 def _one_radius_jit(ix, queries, qnorm2, state, t_static, cfg):
     return _radius_step(ix, queries, qnorm2, state, t_static,
@@ -496,16 +568,17 @@ def _one_radius_jit(ix, queries, qnorm2, state, t_static, cfg):
 
 
 def _host_plan(ix: IndexArrays, queries: jnp.ndarray,
-               cfg: QueryConfig) -> QueryResult:
+               cfg: QueryConfig, valid=None) -> QueryResult:
     """PRE-FUSION adaptive path, kept as the benchmark baseline: one jitted
     dispatch plus one device->host sync per radius. Identical results."""
-    queries, qnorm2 = _prep_queries(jnp.asarray(queries))
-    state = _init_state(queries.shape[0], cfg)
+    queries, valid, realQ = _pad_min_q(jnp.asarray(queries), valid)
+    queries, qnorm2 = _prep_queries(queries)
+    state = _init_state(queries.shape[0], cfg, valid)
     for t in range(len(cfg.radii)):
         state = _one_radius_jit(ix, queries, qnorm2, state, t, cfg)
         if bool(jax.device_get(jnp.all(state[2]))):
             break
-    return _result_from_state(state, cfg)
+    return _result_from_state(state, cfg, valid).slice_rows(0, realQ)
 
 
 # --------------------------------------------------------------------------
@@ -558,9 +631,19 @@ class SearchEngine:
         bo = int(block_objs or self._base_block_objs)
         if bo not in self._by_block_objs:
             if self._sharded is not None:
-                raise ValueError(
-                    "block_objs override is not supported for a sharded index "
-                    "(per-shard stores are blockified at build time)")
+                # Known gap (ROADMAP "sharded block_objs knob"): repacking a
+                # stacked per-shard store means re-blockifying each shard's
+                # CSR slice and re-padding NB to a new common extent — not
+                # implemented. The raise is pinned by tests/test_distributed.
+                raise NotImplementedError(
+                    "per-shard re-blockification is not implemented: a "
+                    "ShardedIndexArrays stacks every shard's block store "
+                    "padded to a common row count, so changing block_objs="
+                    f"{bo} (built at {self._base_block_objs}) requires "
+                    "repacking each shard and re-padding. Rebuild with "
+                    "build_sharded_index(...) at the desired block size, or "
+                    "use a single-device SearchEngine for the block_objs "
+                    "timing knob.")
             self._by_block_objs[bo] = (
                 self._by_block_objs[self._base_block_objs].with_block_objs(bo))
         return self._by_block_objs[bo]
@@ -581,7 +664,8 @@ class SearchEngine:
     def query(self, queries, *, plan: Optional[str] = None, k: int = 1,
               s_cap: Optional[int] = None, block_objs: Optional[int] = None,
               collect_probe_sizes: bool = False,
-              s_cap_per_shard: Optional[int] = None) -> QueryResult:
+              s_cap_per_shard: Optional[int] = None,
+              valid=None) -> QueryResult:
         """Run a query batch under the selected execution plan.
 
         plan: "fused" (production single-dispatch while_loop), "oracle"
@@ -589,9 +673,16 @@ class SearchEngine:
         "host" (pre-fusion per-radius host loop, benchmarking only), or
         "sharded" (fused engine per device inside shard_map). None selects
         the production plan for the index type.
+
+        valid: optional [Q] bool mask for padded serving batches — masked
+        rows are inert (no probes, zero I/O counters, unprobed trace,
+        found=False) and the unmasked rows are bit-exact with an unpadded
+        dispatch.
         """
         plan = plan or self.default_plan
         queries = jnp.asarray(queries)
+        if valid is not None:
+            valid = jnp.asarray(valid, dtype=bool)
         if self._sharded is not None:
             if plan not in self.SHARDED_PLANS:
                 raise ValueError(
@@ -601,8 +692,7 @@ class SearchEngine:
                 raise ValueError("collect_probe_sizes is not supported under "
                                  "the sharded plans")
             if block_objs is not None:
-                raise ValueError("block_objs override is not supported under "
-                                 "the sharded plans")
+                self.arrays(block_objs)  # raises NotImplementedError
             if self.mesh is None:
                 raise ValueError("sharded plans need SearchEngine(..., mesh=)")
             from .distributed import sharded_query_result
@@ -611,6 +701,7 @@ class SearchEngine:
                 index_axes=self.index_axes, query_axes=self.query_axes,
                 s_cap=s_cap, s_cap_per_shard=s_cap_per_shard,
                 local_plan="fused" if plan == "sharded" else "oracle",
+                valid=valid,
             )
         if plan not in self.SINGLE_PLANS:
             raise ValueError(f"unknown plan {plan!r}; expected one of "
@@ -621,29 +712,88 @@ class SearchEngine:
                              "use s_cap for a single-device index")
         cfg = self.config(k=k, collect_probe_sizes=collect_probe_sizes,
                           s_cap=s_cap, block_objs=block_objs)
-        if plan == "fused":
-            return _fused_jit(self.arrays(cfg.block_objs), queries, cfg)
         if plan == "host":
-            return _host_plan(self.arrays(), queries, cfg)
-        return _oracle_jit(self.arrays(), queries, cfg)
+            return _host_plan(self.arrays(), queries, cfg, valid)
+        ix = self.arrays(cfg.block_objs if plan == "fused" else None)
+        if valid is None:
+            run = _fused_jit if plan == "fused" else _oracle_jit
+            return run(ix, queries, cfg)
+        run = _fused_masked_jit if plan == "fused" else _oracle_masked_jit
+        return run(ix, queries, valid, cfg)
 
-    def make_plan_fn(self, *, plan: Optional[str] = None, k: int = 1, **kw):
-        """(cfg, fn): a QueryConfig plus a closure `fn(queries) -> QueryResult`
-        pinned to one plan — what serving loops close over (replaces the
-        deprecated `make_query_fn`). For single-index plans the config and
+    def make_plan_fn(self, *, plan: Optional[str] = None, k: int = 1,
+                     masked: bool = False, **kw):
+        """(cfg, fn): a QueryConfig plus a closure pinned to one plan — what
+        serving loops close over. For single-index plans the config and
         (re-blockified) arrays are resolved ONCE here, so the closure adds
-        zero per-call host work to the dispatch path."""
+        zero per-call host work to the dispatch path.
+
+        masked=False: ``fn(queries) -> QueryResult``.
+        masked=True:  ``fn(queries, valid) -> QueryResult`` — the padded-tick
+        dispatch target of serving.BatchQueue (valid [Q] bool; masked rows
+        inert)."""
         plan = plan or self.default_plan
         if self._sharded is not None:
-            # query() kwargs that never reach config(); the returned cfg
-            # reflects the pre-shard schedule (sharded_query_result applies
-            # the per-shard S budget internally)
+            # the sharded executor rebuilds its per-shard config from params
+            # (sharded_query_result applies the S budget internally), so any
+            # knob it cannot honor must be REJECTED here — silently accepting
+            # block_objs/collect_probe_sizes/max_chain would return a cfg
+            # that lies about the executed plan
             s_cap_per_shard = kw.pop("s_cap_per_shard", None)
-            cfg = self.config(k=k, **kw)
+            if kw.get("collect_probe_sizes"):
+                raise ValueError("collect_probe_sizes is not supported under "
+                                 "the sharded plans")
+            if kw.get("block_objs") is not None:
+                self.arrays(kw["block_objs"])  # raises NotImplementedError
+            if kw.get("max_chain"):
+                raise ValueError("max_chain override is not supported under "
+                                 "the sharded plans (the per-shard schedule "
+                                 "is derived from the index params)")
+            unknown = set(kw) - {"s_cap", "collect_probe_sizes", "block_objs",
+                                 "max_chain"}
+            if unknown:
+                raise TypeError(f"unexpected plan kwargs {sorted(unknown)}")
+            # the returned cfg reflects the pre-shard schedule
+            cfg = self.config(k=k, s_cap=kw.get("s_cap"))
 
-            def fn(queries):
-                return self.query(queries, plan=plan, k=k,
-                                  s_cap_per_shard=s_cap_per_shard, **kw)
+            if masked:
+                # the serving queue's dispatch target: ONE jitted program per
+                # batch shape (the eager shard_map path would re-trace every
+                # tick, breaking the queue's warmed-ladder no-retrace
+                # contract)
+                if plan not in self.SHARDED_PLANS:
+                    raise ValueError(
+                        f"unknown plan {plan!r} for a sharded index; expected "
+                        f"one of {self.SHARDED_PLANS}")
+                if self.mesh is None:
+                    raise ValueError("sharded plans need SearchEngine(..., "
+                                     "mesh=)")
+                from .distributed import sharded_query_result
+                sh, mesh = self._sharded, self.mesh
+                index_axes, query_axes = self.index_axes, self.query_axes
+                s_cap = kw.get("s_cap")
+                local_plan = "fused" if plan == "sharded" else "oracle"
+
+                @jax.jit
+                def run(arrays, offs, queries, valid):
+                    tmp = dataclasses.replace(sh, arrays=arrays,
+                                              shard_offsets=offs)
+                    return sharded_query_result(
+                        tmp, queries, mesh, k=k, index_axes=index_axes,
+                        query_axes=query_axes, s_cap=s_cap,
+                        s_cap_per_shard=s_cap_per_shard,
+                        local_plan=local_plan, valid=valid)
+
+                def fn(queries, valid):
+                    return run(sh.arrays, sh.shard_offsets,
+                               jnp.asarray(queries),
+                               jnp.asarray(valid, dtype=bool))
+            else:
+                s_cap = kw.get("s_cap")
+
+                def fn(queries):
+                    return self.query(queries, plan=plan, k=k, s_cap=s_cap,
+                                      s_cap_per_shard=s_cap_per_shard)
 
             return cfg, fn
         if plan not in self.SINGLE_PLANS:
@@ -651,91 +801,20 @@ class SearchEngine:
                              f"{self.SINGLE_PLANS}")
         cfg = self.config(k=k, **kw)
         ix = self.arrays(cfg.block_objs if plan == "fused" else None)
-        run = {"fused": _fused_jit, "oracle": _oracle_jit,
-               "host": _host_plan}[plan]
+        if masked:
+            run = {"fused": _fused_masked_jit, "oracle": _oracle_masked_jit,
+                   "host": (lambda ix_, q, v, c: _host_plan(ix_, q, c, v))}[plan]
 
-        def fn(queries):
-            return run(ix, jnp.asarray(queries), cfg)
+            def fn(queries, valid):
+                return run(ix, jnp.asarray(queries),
+                           jnp.asarray(valid, dtype=bool), cfg)
+        else:
+            run = {"fused": _fused_jit, "oracle": _oracle_jit,
+                   "host": _host_plan}[plan]
+
+            def fn(queries):
+                return run(ix, jnp.asarray(queries), cfg)
 
         return cfg, fn
 
 
-# --------------------------------------------------------------------------
-# Deprecated free-function wrappers (one-PR migration shims).
-#
-# tests/pytest.ini escalates DeprecationWarnings attributed to repro.* into
-# errors, so these cannot creep back into internal call sites.
-# --------------------------------------------------------------------------
-
-def _warn_deprecated(old: str, new: str):
-    warnings.warn(f"{old} is deprecated; use {new}. The wrapper will be "
-                  "removed next PR.", DeprecationWarning, stacklevel=3)
-
-
-def _coerce(arrays, cfg: QueryConfig, *, need_blocks: bool = False) -> IndexArrays:
-    if isinstance(arrays, IndexArrays):
-        if need_blocks and arrays.block_objs != cfg.block_objs:
-            return arrays.with_block_objs(cfg.block_objs)
-        return arrays
-    return IndexArrays.from_dict(arrays, cfg.block_objs)
-
-
-def query_batch(arrays, queries, cfg: QueryConfig) -> QueryResult:
-    """DEPRECATED: use ``SearchEngine(index).query(qs, plan="oracle")``."""
-    _warn_deprecated("query_batch", 'SearchEngine(index).query(qs, plan="oracle")')
-    return _oracle_jit(_coerce(arrays, cfg), jnp.asarray(queries), cfg)
-
-
-def query_batch_fused(arrays, queries, cfg: QueryConfig) -> QueryResult:
-    """DEPRECATED: use ``SearchEngine(index).query(qs, plan="fused")``."""
-    _warn_deprecated("query_batch_fused",
-                     'SearchEngine(index).query(qs, plan="fused")')
-    return _fused_jit(_coerce(arrays, cfg, need_blocks=True),
-                      jnp.asarray(queries), cfg)
-
-
-def query_batch_adaptive(arrays, queries, cfg: QueryConfig) -> QueryResult:
-    """DEPRECATED: use ``SearchEngine(index).query(qs, plan="fused")``."""
-    _warn_deprecated("query_batch_adaptive",
-                     'SearchEngine(index).query(qs, plan="fused")')
-    return _fused_jit(_coerce(arrays, cfg, need_blocks=True),
-                      jnp.asarray(queries), cfg)
-
-
-def query_batch_adaptive_host(arrays, queries, cfg: QueryConfig) -> QueryResult:
-    """DEPRECATED: use ``SearchEngine(index).query(qs, plan="host")``."""
-    _warn_deprecated("query_batch_adaptive_host",
-                     'SearchEngine(index).query(qs, plan="host")')
-    return _host_plan(_coerce(arrays, cfg), jnp.asarray(queries), cfg)
-
-
-def ensure_fused_arrays(arrays, block_objs: int):
-    """DEPRECATED: `build_index` emits the blockified `IndexArrays` natively;
-    there is nothing to ensure. Returns the legacy dict view for old call
-    sites (memoized per block size)."""
-    _warn_deprecated("ensure_fused_arrays",
-                     "the IndexArrays pytree emitted by build_index")
-    if isinstance(arrays, IndexArrays):
-        return arrays.with_block_objs(block_objs)
-    if arrays.get("_blockified_objs") == block_objs:
-        return arrays
-    cache = arrays.setdefault("_fused_dict_cache", {})
-    if block_objs not in cache:
-        ix = IndexArrays.from_dict(arrays, block_objs)
-        cache[block_objs] = ix.as_dict()
-    return cache[block_objs]
-
-
-def make_query_fn(params: LSHParams, *, k: int = 1, engine: str = "fused", **kw):
-    """DEPRECATED: use ``SearchEngine(index).make_plan_fn(plan=...)``."""
-    _warn_deprecated("make_query_fn", "SearchEngine(index).make_plan_fn(plan=...)")
-    if engine not in ("fused", "oracle"):
-        raise ValueError(f"unknown engine {engine!r}; expected 'fused' or 'oracle'")
-    cfg = QueryConfig.from_params(params, k=k, **kw)
-
-    def fn(arrays, queries):
-        ix = _coerce(arrays, cfg, need_blocks=(engine == "fused"))
-        run = _fused_jit if engine == "fused" else _oracle_jit
-        return run(ix, jnp.asarray(queries), cfg)
-
-    return cfg, fn

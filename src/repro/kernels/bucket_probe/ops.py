@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..dispatch import use_pallas_default
+from ..dispatch import default_interpret, use_pallas_default
 from .kernel import bucket_probe_pallas
 from .ref import bucket_probe_ref, INVALID
 
@@ -79,15 +79,19 @@ def blockify_entries(entries_id: np.ndarray, entries_fp: np.ndarray,
 
 @partial(jax.jit, static_argnames=("interpret", "use_pallas"))
 def bucket_probe(block_rows, qfp, ids_blocks, fps_blocks, *,
-                 interpret: bool = False, use_pallas: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 use_pallas: Optional[bool] = None):
     """Fetch + fingerprint-filter a list of bucket blocks.
 
     block_rows [G] int32 (row 0 = guaranteed-empty spare -> safe padding),
     qfp [G] int32. Returns [G, BLKp] int32 with INVALID in non-matching slots.
-    `use_pallas=None` auto-selects: Pallas on TPU, jnp gather elsewhere.
+    `use_pallas=None` auto-selects: Pallas on TPU (or REPRO_FORCE_PALLAS),
+    jnp gather elsewhere; `interpret=None` follows the same env policy.
     """
     if use_pallas is None:
         use_pallas = use_pallas_default()
+    if interpret is None:
+        interpret = default_interpret()
     if not use_pallas:
         return bucket_probe_ref(block_rows, qfp, ids_blocks, fps_blocks)
     qfp2 = qfp.astype(jnp.int32).reshape(-1, 1)

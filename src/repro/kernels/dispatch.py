@@ -4,29 +4,53 @@ Every kernels/*/ops.py wrapper (and the fused query engine's layout
 decisions) asks this module whether the Pallas path should lower natively;
 changing the policy — e.g. adding a GPU lowering or an env override — is a
 one-file edit.
+
+Env override: ``REPRO_FORCE_PALLAS=1`` (or ``interpret``) pins the Pallas
+kernel path on EVERY backend, running the kernels in interpret mode when no
+TPU is present. This is the multi-backend CI lane (`make kernel-lane`): the
+three kernel ops execute end to end through the fused query plan off-TPU,
+so kernel-path regressions fail CI without TPU hardware. Set the variable
+before process start — dispatch decisions are burned into jit caches.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 
-__all__ = ["on_tpu", "use_pallas_default", "native_lane_pad"]
+__all__ = ["on_tpu", "force_pallas_env", "use_pallas_default",
+           "default_interpret", "native_lane_pad"]
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def force_pallas_env() -> bool:
+    """True when REPRO_FORCE_PALLAS pins the kernel path (CI lane)."""
+    return os.environ.get("REPRO_FORCE_PALLAS", "").lower() in (
+        "1", "true", "interpret")
+
+
 def use_pallas_default() -> bool:
     """Backend policy: Pallas lowers natively on TPU; every other backend
-    runs the pure-jnp oracle (bit-identical math, no interpret overhead)."""
-    return on_tpu()
+    runs the pure-jnp oracle (bit-identical math, no interpret overhead) —
+    unless REPRO_FORCE_PALLAS pins the kernel path."""
+    return on_tpu() or force_pallas_env()
+
+
+def default_interpret() -> bool:
+    """Interpret-mode default for ops wrappers: forced kernel paths off-TPU
+    must run under the Pallas interpreter."""
+    return force_pallas_env() and not on_tpu()
 
 
 def native_lane_pad() -> int:
     """Block-store row-width alignment for the current backend.
 
-    128 is the TPU lane contract of the bucket_probe scalar-prefetch kernel;
-    off-TPU the jnp gather path would stream dead padding columns, so block
-    rows are padded only to the SIMD-friendly 8. `core.index.build_index`
-    emits the blockified layout at this width."""
-    return 128 if on_tpu() else 8
+    128 is the TPU lane contract of the bucket_probe scalar-prefetch kernel
+    (also honored under REPRO_FORCE_PALLAS so the interpret lane exercises
+    the real layout); off-TPU the jnp gather path would stream dead padding
+    columns, so block rows are padded only to the SIMD-friendly 8.
+    `core.index.build_index` emits the blockified layout at this width."""
+    return 128 if (on_tpu() or force_pallas_env()) else 8

@@ -7,7 +7,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from ..dispatch import use_pallas_default
+from ..dispatch import default_interpret, use_pallas_default
 from .kernel import l2_distance_gathered_pallas, l2_distance_pallas
 from .ref import l2_distance_gathered_ref, l2_distance_ref
 
@@ -20,13 +20,15 @@ def _pad_to(x, mult):
 
 @partial(jax.jit, static_argnames=("tile_q", "tile_c", "interpret", "force_pallas"))
 def l2_distance(q, x, *, tile_q: int = 128, tile_c: int = 128,
-                interpret: bool = False, force_pallas: bool = False):
+                interpret: bool = None, force_pallas: bool = False):
     """Squared L2 distances [NQ, NC] between rows of q [NQ, D] and x [NC, D].
 
     Padded rows return garbage distances in the padding region only; the
     public result is sliced back to [NQ, NC]. Padding the feature dim with
     zeros is exact.
     """
+    if interpret is None:
+        interpret = default_interpret()
     NQ, D = q.shape
     NC, _ = x.shape
     if not force_pallas and (not use_pallas_default()
@@ -42,13 +44,15 @@ def l2_distance(q, x, *, tile_q: int = 128, tile_c: int = 128,
 
 
 @partial(jax.jit, static_argnames=("interpret", "force_pallas"))
-def l2_distance_gathered(q, coords, xn2, qn2, *, interpret: bool = False,
+def l2_distance_gathered(q, coords, xn2, qn2, *, interpret: bool = None,
                          force_pallas: bool = False):
     """Gathered-candidate distances (the query engine's Step-3 epilogue).
 
     q [Q, D], coords [Q, S, D], xn2 [Q, S], qn2 [Q] -> d2 [Q, S], unclamped
     (callers mask invalid slots and clamp, as core.query's oracle does).
     """
+    if interpret is None:
+        interpret = default_interpret()
     Q, S, D = coords.shape
     if not force_pallas and not use_pallas_default():
         return l2_distance_gathered_ref(q, coords, xn2, qn2)

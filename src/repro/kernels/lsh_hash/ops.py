@@ -20,7 +20,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from ..dispatch import use_pallas_default
+from ..dispatch import default_interpret, use_pallas_default
 from .kernel import lsh_hash_pallas
 from .ref import lsh_hash_all_radii_ref, lsh_hash_ref
 
@@ -55,12 +55,15 @@ def _pack_and_hash(x, a2, bwr, wr, rm_flat, *, n_hashes, m, u, fp_bits,
 
 @partial(jax.jit, static_argnames=("w_r", "u", "fp_bits", "tile_n", "interpret", "force_pallas"))
 def lsh_hash(x, a, b, rm, *, w_r: float, u: int, fp_bits: int,
-             tile_n: int = 256, interpret: bool = False, force_pallas: bool = False):
+             tile_n: int = 256, interpret: bool = None,
+             force_pallas: bool = False):
     """Hash points under one (radius, family) block.
 
     x [N, D] float; a [L, m, D]; b [L, m] in [0,1); rm [L, m] uint32/int32.
     Returns (bucket [N, L] int32, fp [N, L] int32).
     """
+    if interpret is None:
+        interpret = default_interpret()
     N, D = x.shape
     L, m, _ = a.shape
     Dp = _pad_to(max(D, 128), 128)
@@ -82,14 +85,16 @@ def lsh_hash(x, a, b, rm, *, w_r: float, u: int, fp_bits: int,
 @partial(jax.jit, static_argnames=("w", "radii", "u", "fp_bits", "tile_n",
                                    "interpret", "force_pallas"))
 def lsh_hash_all_radii(x, a, b, rm, *, w: float, radii: tuple, u: int,
-                       fp_bits: int, tile_n: int = 256, interpret: bool = False,
-                       force_pallas: bool = False):
+                       fp_bits: int, tile_n: int = 256,
+                       interpret: bool = None, force_pallas: bool = False):
     """Hash points under the FULL radius schedule in one dispatch.
 
     x [N, D]; a [r, L, m, D]; b/rm [r, L, m]; radii = static schedule.
     Returns (bucket, fp) [r, N, L] int32 — same layout as stacking the
     per-radius results.
     """
+    if interpret is None:
+        interpret = default_interpret()
     N, D = x.shape
     r, L, m, _ = a.shape
     assert len(radii) == r, (len(radii), r)

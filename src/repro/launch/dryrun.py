@@ -278,6 +278,95 @@ def run_ann_cell(multi_pod: bool, *, n: int = 1_000_000_000, d: int = 128,
     return rec
 
 
+def run_queue_cell(*, ladder=(8, 32, 128), tick_us: float = 200.0,
+                   max_batch: int | None = None, n: int = 10_000_000,
+                   d: int = 128, k: int = 10) -> dict:
+    """Serving-queue shape-ladder warmup at production scale: lower + compile
+    the MASKED fused plan (serving.BatchQueue's per-tick dispatch target) at
+    every ladder rung against a placeholder single-device index of `n`
+    objects, recording per-rung compile seconds — the startup cost a serving
+    replica pays before its first tick — plus memory/cost analysis for the
+    largest rung."""
+    import jax.numpy as jnp
+    from ..core.probabilities import solve_params
+    from ..core.query import QueryConfig, _fused_masked_jit
+    from ..core.index import IndexArrays
+    from ..kernels.dispatch import native_lane_pad
+    from ..serving import BatchQueue
+
+    t0 = time.time()
+    # the ONE ladder normalization (shared with the serving queue), so the
+    # recorded warmup bill covers exactly the rungs a replica compiles
+    ladder = BatchQueue.resolve_ladder(ladder, max_batch)
+    rec = {"arch": "e2lshos-serving-queue", "shape": f"ladder_{list(ladder)}",
+           "mesh": "single-device", "params": 0, "tick_us": tick_us,
+           "max_batch": ladder[-1]}
+    try:
+        u_bits = max(8, int(np.floor(np.log2(n))) - 1)
+        params = solve_params(n, d, c=2.0, w=4.0, gamma=1.0, x_max=1.0,
+                              max_L=48, max_m=24, u_bits=u_bits)
+        r, L, u = params.r, params.L, params.u
+        E = n * L * r
+        lane_pad = native_lane_pad()
+        sds = jax.ShapeDtypeStruct
+        # block-store rows ~ one chunk per non-empty bucket at BIGANN-like
+        # occupancy (~2 objs/bucket); placeholder extent, shapes only
+        NB = min(E // max(1, params.block_objs) + 1, E + 1)
+        arrays = IndexArrays(
+            a=sds((r, L, params.m, d), jnp.float32),
+            b=sds((r, L, params.m), jnp.float32),
+            rm=sds((r, L, params.m), jnp.uint32),
+            ids_blocks=sds((NB, lane_pad), jnp.int32),
+            fps_blocks=sds((NB, lane_pad), jnp.int32),
+            blocks_head=sds((r, L, 1 << u), jnp.int32),
+            table_off=sds((r, L, 1 << u), jnp.int32),
+            table_cnt=sds((r, L, 1 << u), jnp.int32),
+            entries_id=sds((E,), jnp.int32),
+            entries_fp=sds((E,), jnp.uint16),
+            db=sds((n, d), jnp.float32),
+            db_norm2=sds((n,), jnp.float32),
+            block_objs=params.block_objs, lane_pad=lane_pad,
+        )
+        cfg = QueryConfig.from_params(params, k=k)
+        rec["index_params"] = dict(m=params.m, L=L, r=r, u=u, S=cfg.S,
+                                   block_objs=params.block_objs)
+        rungs = {}
+        for shape in ladder:
+            ts = time.time()
+            lowered = _fused_masked_jit.lower(
+                arrays, sds((shape, d), jnp.float32), sds((shape,), jnp.bool_),
+                cfg)
+            compiled = lowered.compile()
+            rungs[str(shape)] = {"compile_seconds": round(time.time() - ts, 2)}
+            if shape == ladder[-1]:
+                try:
+                    mem = compiled.memory_analysis()
+                    rec["memory"] = {
+                        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                        "temp_bytes": getattr(mem, "temp_size_in_bytes", None)}
+                except Exception as e:
+                    rec["memory"] = {"error": str(e)[:200]}
+                try:
+                    cost = compiled.cost_analysis()
+                    if isinstance(cost, (list, tuple)):
+                        cost = cost[0]
+                    rec["cost"] = {kk: float(v) for kk, v in cost.items()
+                                   if isinstance(v, (int, float)) and (
+                                       "flops" in kk or "bytes" in kk)}
+                except Exception as e:
+                    rec["cost"] = {"error": str(e)[:200]}
+        rec["ladder"] = rungs
+        rec["warmup_seconds_total"] = round(
+            sum(v["compile_seconds"] for v in rungs.values()), 2)
+        rec["status"] = "OK"
+    except Exception as e:
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {str(e)[:500]}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["seconds"] = round(time.time() - t0, 1)
+    return rec
+
+
 def _depth_variant(cfg, k: int):
     """Return (config with k stack units, units_in_full_model). A unit is one
     layer (dense/moe/ssm), one mamba-group+shared-block (hybrid), or one
@@ -376,6 +465,15 @@ def main():
     ap.add_argument("--shape", default=None, help="one shape (default: all)")
     ap.add_argument("--mesh", default="both", choices=("single", "multi", "both"))
     ap.add_argument("--ann", action="store_true", help="run the BIGANN(1B) ANN cell")
+    ap.add_argument("--queue", action="store_true",
+                    help="run the serving-queue shape-ladder warmup cell "
+                         "(compile the masked fused plan per ladder rung)")
+    ap.add_argument("--ladder", default="8,32,128",
+                    help="batch-shape ladder for --queue, comma-separated")
+    ap.add_argument("--tick-us", dest="tick_us", type=float, default=200.0,
+                    help="tick interval recorded in the --queue cell")
+    ap.add_argument("--max-batch", dest="max_batch", type=int, default=None,
+                    help="cap the --queue ladder at this rung")
     ap.add_argument("--extrapolate", action="store_true",
                     help="depth-extrapolated cost records (roofline input)")
     ap.add_argument("--out", default=None, help="append JSONL here")
@@ -400,6 +498,12 @@ def main():
             cost_brief = {k: v for k, v in rec["cost"].items()
                           if k in ("flops", "bytes accessed")}
             print(f"  cost_analysis: {cost_brief}", flush=True)
+
+    if args.queue:
+        emit(run_queue_cell(
+            ladder=tuple(int(s) for s in args.ladder.split(",")),
+            tick_us=args.tick_us, max_batch=args.max_batch))
+        return
 
     if args.ann:
         for mp in meshes:

@@ -5,6 +5,11 @@ serving with optional kNN retrieval over an E2LSHoS index.
     PYTHONPATH=src python -m repro.launch.serve --mode ann --dataset sift \
         --n 20000 --queries 256 --k 10
 
+    # micro-batched serving front-end: ragged request stream through the
+    # BatchQueue (ONE fused dispatch per tick; per-tick occupancy/pad stats)
+    PYTHONPATH=src python -m repro.launch.serve --mode ann --queue \
+        --tick-us 200 --max-batch 128 --queries 256
+
     # LM decode with retrieval over the model's own hidden states
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch mamba2-1.3b \
         --reduced --steps 8 --retrieval
@@ -24,7 +29,58 @@ from ..core import E2LSHoS, SearchEngine, measured_query, overall_ratio
 from ..core.distributed import build_sharded_index
 from ..data import make_dataset
 from ..models import Model
-from ..serving import ServeEngine
+from ..serving import BatchQueue, ServeEngine
+
+
+def _ragged_requests(queries: np.ndarray, *, max_batch: int, seed: int):
+    """Split the query set into a ragged request stream (sizes 1..max_batch/4,
+    the arbitrary-per-caller shapes the queue exists to absorb)."""
+    rng = np.random.default_rng(seed + 1)
+    out, i = [], 0
+    hi = max(2, max_batch // 4)
+    while i < queries.shape[0]:
+        b = int(rng.integers(1, hi + 1))
+        out.append(queries[i:i + b])
+        i += b
+    return out
+
+
+def serve_ann_queued(args, engine: SearchEngine, queries: np.ndarray,
+                     gt_dists: np.ndarray, *, plan=None):
+    """Serve a ragged request stream through the micro-batching queue and
+    report per-tick occupancy / pad waste / dispatch p50/p99 vs the direct
+    per-request baseline."""
+    ladder = tuple(int(s) for s in args.ladder.split(","))
+    queue = BatchQueue(engine, plan=plan, k=args.k, ladder=ladder,
+                       max_batch=args.max_batch, tick_us=args.tick_us)
+    requests = _ragged_requests(queries, max_batch=args.max_batch,
+                                seed=args.seed)
+    # direct baseline: one dispatch per request at its own shape
+    _, direct_fn = engine.make_plan_fn(plan=queue.plan, k=args.k)
+    for r in requests:
+        jax.block_until_ready(direct_fn(r).ids)    # warm per-shape programs
+    t0 = time.perf_counter()
+    direct = [direct_fn(r) for r in requests]
+    jax.block_until_ready(direct[-1].ids)
+    t_direct = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    with queue:
+        tickets = [queue.submit(r) for r in requests]
+        results = [t.result(timeout=600) for t in tickets]
+    t_queued = time.perf_counter() - t0
+    rows = queries.shape[0]
+    s = queue.stats_summary()
+    ratio = overall_ratio(
+        np.concatenate([np.asarray(r.dists) for r in results]),
+        gt_dists[:rows, :args.k])
+    print(f"[queue] {len(requests)} requests / {rows} rows in "
+          f"{s['ticks']} ticks ({s['dispatches']} dispatches); "
+          f"occupancy {s['occupancy_mean']:.2f}, pad waste {s['pad_waste']:.2f}")
+    print(f"[queue] dispatch p50 {s['p50_dispatch_ms']:.2f} ms / "
+          f"p99 {s['p99_dispatch_ms']:.2f} ms; ratio={ratio:.4f}")
+    print(f"[queue] qps {rows / t_queued:.0f} queued vs {rows / t_direct:.0f} "
+          f"direct ({t_direct / t_queued:.2f}x)")
 
 
 def serve_ann(args):
@@ -37,6 +93,10 @@ def serve_ann(args):
                                  seed=args.seed)
         # one entry point, sharded plan: fused one-dispatch probe per device
         engine = SearchEngine(sh, mesh=mesh)
+        if args.queue:
+            serve_ann_queued(args, engine, ds.queries, ds.gt_dists,
+                             plan="sharded")
+            return
         t0 = time.perf_counter()
         res = engine.query(jnp.asarray(ds.queries), plan="sharded", k=args.k)
         jax.block_until_ready(res.ids)
@@ -47,6 +107,10 @@ def serve_ann(args):
               f"t/query={dt/args.queries*1e6:.0f}us")
         return
     idx = E2LSHoS.build(ds.db, gamma=args.gamma, max_L=args.max_L, seed=args.seed)
+    if args.queue:
+        serve_ann_queued(args, SearchEngine(idx), ds.queries, ds.gt_dists,
+                         plan=args.plan)
+        return
     mq = measured_query(idx, ds.queries, k=args.k, plan=args.plan)
     ratio = overall_ratio(np.asarray(mq.result.dists), ds.gt_dists[:, :args.k])
     print(f"[single/{args.plan}] ratio={ratio:.4f} nio/query={mq.nio_mean:.0f} "
@@ -104,6 +168,17 @@ def main(argv=None):
     ap.add_argument("--n", type=int, default=20000)
     ap.add_argument("--queries", type=int, default=64)
     ap.add_argument("--k", type=int, default=1)
+    ap.add_argument("--queue", action="store_true",
+                    help="serve a ragged request stream through the dynamic "
+                         "micro-batching BatchQueue (one fused dispatch per "
+                         "tick) and report occupancy/pad/p50/p99 vs direct "
+                         "per-request dispatch")
+    ap.add_argument("--tick-us", dest="tick_us", type=float, default=200.0,
+                    help="queue tick interval in microseconds")
+    ap.add_argument("--max-batch", dest="max_batch", type=int, default=128,
+                    help="max rows per tick (larger requests spill)")
+    ap.add_argument("--ladder", default="8,32,128",
+                    help="compiled batch-shape ladder, comma-separated")
     ap.add_argument("--gamma", type=float, default=0.8)
     ap.add_argument("--max-L", dest="max_L", type=int, default=32)
     ap.add_argument("--arch", default="mamba2-1.3b")

@@ -1,3 +1,5 @@
-from .engine import ServeEngine, GenerationResult
+from .engine import (BatchQueue, QueryTicket, TickStats,
+                     ServeEngine, GenerationResult)
 
-__all__ = ["ServeEngine", "GenerationResult"]
+__all__ = ["BatchQueue", "QueryTicket", "TickStats",
+           "ServeEngine", "GenerationResult"]

@@ -103,6 +103,82 @@ def test_sharded_plan_matches_oracle_1_2_4_shards():
         assert res[sh_n]["found"] > 0.5
 
 
+def test_sharded_block_objs_reblockify_gap_is_pinned():
+    """Known gap (ROADMAP "sharded block_objs knob"): per-shard
+    re-blockification is unimplemented. The raise must be a
+    NotImplementedError whose message tells the operator what to do instead
+    (rebuild at the desired block size / use a single-device engine)."""
+    import numpy as np
+    from repro.core import SearchEngine
+    from repro.core.distributed import build_sharded_index
+
+    db = np.random.default_rng(0).normal(size=(600, 8)).astype(np.float32)
+    sh = build_sharded_index(db, 2, gamma=0.7, max_L=4, seed=1)
+    engine = SearchEngine(sh)
+    with pytest.raises(NotImplementedError, match="build_sharded_index"):
+        engine.arrays(block_objs=16)
+    # the native layout is still served
+    assert engine.arrays().block_objs == sh.params.block_objs
+    # make_plan_fn must REJECT (not silently drop) knobs the sharded
+    # executor cannot honor — the returned cfg must not lie about the plan
+    with pytest.raises(NotImplementedError, match="build_sharded_index"):
+        engine.make_plan_fn(plan="sharded", block_objs=16)
+    with pytest.raises(ValueError, match="collect_probe_sizes"):
+        engine.make_plan_fn(plan="sharded", collect_probe_sizes=True)
+    with pytest.raises(ValueError, match="max_chain"):
+        engine.make_plan_fn(plan="sharded", max_chain=7)
+
+
+def test_queue_over_sharded_plan_matches_direct_2_shards():
+    """The micro-batching queue in front of plan="sharded" on a 2-shard
+    mesh: queued ragged requests (incl. size 1 and a spill) are bit-exact
+    with direct sharded dispatch per request, one shard_map dispatch per
+    tick."""
+    res = _run("""
+        import json
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core.distributed import build_sharded_index
+        from repro.core import SearchEngine
+        from repro.serving import BatchQueue
+
+        rng = np.random.default_rng(9)
+        n, d = 3001, 16   # odd n: uneven shards -> real padding
+        centers = rng.normal(size=(32, d)).astype(np.float32)
+        db = (centers[rng.integers(0, 32, n)]
+              + 0.2*rng.normal(size=(n, d))).astype(np.float32) / 2.0
+        mesh = Mesh(np.array(jax.devices()[:2]), ("shard",))
+        sh = build_sharded_index(db, 2, gamma=0.7, s_scale=2.0, max_L=16,
+                                 seed=3)
+        engine = SearchEngine(sh, mesh=mesh)
+        queue = BatchQueue(engine, plan="sharded", k=2, ladder=(4, 8),
+                           tick_us=50.0)
+        _, direct = engine.make_plan_fn(plan="sharded", k=2)
+        sizes = (1, 4, 11, 3)   # 11 > max_batch: spills across ticks
+        reqs = [(db[rng.choice(n, b, replace=False)]
+                 + 0.05*rng.normal(size=(b, d))).astype(np.float32)
+                for b in sizes]
+        tickets = [queue.submit(r) for r in reqs]
+        queue.drain()
+        fields = ("ids", "dists", "found", "radii_searched", "nio_table",
+                  "nio_blocks", "cands_checked")
+        exact = True
+        for r, t in zip(reqs, tickets):
+            got, want = t.result(0), direct(jnp.asarray(r))
+            for f in fields:
+                exact = exact and np.array_equal(
+                    np.asarray(getattr(got, f)), np.asarray(getattr(want, f)))
+        s = queue.stats_summary()
+        print(json.dumps({"exact": bool(exact),
+                          "one_dispatch_per_tick":
+                              s["dispatches"] == s["ticks"],
+                          "ticks": s["ticks"]}))
+    """)
+    assert res["exact"], "queued sharded results diverged from direct"
+    assert res["one_dispatch_per_tick"]
+    assert res["ticks"] >= 3   # the 11-row request spilled
+
+
 def test_compressed_psum_dp_training():
     res = _run("""
         import json

@@ -1,0 +1,86 @@
+"""Multi-backend kernel lane (ROADMAP "Multi-backend CI").
+
+Runs ONLY under ``REPRO_FORCE_PALLAS=interpret`` (`make kernel-lane`): the
+backend dispatch in kernels/dispatch.py then pins the Pallas path on every
+backend, so the three kernel ops (lsh_hash_all_radii, bucket_probe,
+l2_distance_gathered) execute END TO END through the fused query plan under
+the CPU/GPU Pallas interpreter — kernel-path regressions fail CI without
+TPU hardware.
+
+Cross-backend contract: every integer output (ids, found, radii, I/O
+counters, probe trace) is bit-exact with the jnp oracle; float distances
+carry interpreter-matmul ulp noise (the kernels pad to 128-wide tiles and
+the interpreter may reassociate), so they are held to allclose. On a real
+TPU the same suite runs with native lowering and the full bit-exact
+contract applies (tests/test_query_engine.py).
+"""
+import numpy as np
+import pytest
+
+from repro.kernels.dispatch import (default_interpret, force_pallas_env,
+                                    native_lane_pad, use_pallas_default)
+
+pytestmark = pytest.mark.skipif(
+    not force_pallas_env(),
+    reason="kernel lane: set REPRO_FORCE_PALLAS=interpret (make kernel-lane)")
+
+_INT_FIELDS = ("ids", "found", "radii_searched", "nio_table", "nio_blocks",
+               "cands_checked")
+
+
+@pytest.fixture(scope="module")
+def lane_index():
+    from repro.core import E2LSHoS
+
+    rng = np.random.default_rng(7)
+    n, d = 1200, 12
+    db = (rng.normal(size=(n, d)).astype(np.float32) / 2)
+    qs = db[:10] + 0.02 * rng.normal(size=(10, d)).astype(np.float32)
+    return E2LSHoS.build(db, gamma=0.7, s_scale=2.0, max_L=6, seed=3), qs
+
+
+def test_dispatch_policy_is_forced():
+    assert use_pallas_default()
+    assert default_interpret()          # off-TPU CI boxes
+    assert native_lane_pad() == 128     # the kernel's real lane contract
+
+
+def test_fused_plan_runs_kernel_path_end_to_end(lane_index):
+    """All three kernel ops through the production fused plan, vs the pure
+    jnp oracle plan on the same backend."""
+    from repro.core import SearchEngine
+
+    idx, qs = lane_index
+    engine = SearchEngine(idx)
+    fus = engine.query(qs, plan="fused", k=2, collect_probe_sizes=True)
+    orc = engine.query(qs, plan="oracle", k=2, collect_probe_sizes=True)
+    for name in _INT_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(fus, name)), np.asarray(getattr(orc, name)),
+            err_msg=f"kernel path diverged from oracle on {name}")
+    np.testing.assert_array_equal(np.asarray(fus.probe_sizes),
+                                  np.asarray(orc.probe_sizes))
+    np.testing.assert_allclose(np.asarray(fus.dists), np.asarray(orc.dists),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_queue_parity_holds_on_kernel_path(lane_index):
+    """Queued vs direct dispatch both run the SAME kernel programs, so the
+    queue's bit-exact parity contract (distances included) survives the
+    forced kernel path."""
+    from repro.core import SearchEngine
+    from repro.serving import BatchQueue
+
+    idx, qs = lane_index
+    engine = SearchEngine(idx)
+    queue = BatchQueue(engine, plan="fused", k=1, ladder=(4, 8), tick_us=50.0)
+    _, direct = engine.make_plan_fn(plan="fused", k=1)
+    tickets = [queue.submit(qs[:1]), queue.submit(qs[1:6])]
+    queue.drain()
+    for t, req in zip(tickets, (qs[:1], qs[1:6])):
+        got, want = t.result(0), direct(req)
+        for name in _INT_FIELDS + ("dists",):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, name)),
+                np.asarray(getattr(want, name)),
+                err_msg=f"queued {name} diverged on the kernel path")

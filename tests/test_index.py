@@ -140,22 +140,24 @@ def test_build_emits_native_blockified_layout(built_index):
     assert (np.asarray(ix.blocks_head) != 0).all()
 
 
-def test_index_arrays_dict_roundtrip_preserves_layout(built_index):
-    """The legacy dict view must round-trip the LAYOUT METADATA, not just the
-    arrays: lane_pad is the alignment, not the padded row width BLKp —
-    conflating them would make a later re-blockify pack narrow blocks into
-    full-width rows."""
-    from repro.core.index import IndexArrays
-
+def test_reblockify_roundtrip_preserves_layout_metadata(built_index):
+    """with_block_objs must carry lane_pad as the ALIGNMENT, not the padded
+    row width BLKp — conflating them would make a round-trip repack tiny
+    blocks into full-width rows. Re-blockifying back to the native size
+    reproduces the build-emitted store bit-for-bit (the legacy dict views
+    that used to guard this are deleted; the typed path is the only path)."""
     ix = built_index.index.arrays
-    ix2 = IndexArrays.from_dict(ix.as_dict(), ix.block_objs)
-    assert ix2.lane_pad == ix.lane_pad
-    assert ix2.block_objs == ix.block_objs
-    np.testing.assert_array_equal(np.asarray(ix2.ids_blocks),
+    narrow = ix.with_block_objs(16)
+    assert narrow.lane_pad == ix.lane_pad
+    assert narrow.block_objs == 16
+    back = narrow.with_block_objs(ix.block_objs)
+    assert back.block_objs == ix.block_objs
+    np.testing.assert_array_equal(np.asarray(back.ids_blocks),
                                   np.asarray(ix.ids_blocks))
-    # re-blockifying the adopted copy matches a native re-blockify exactly
-    assert (ix2.with_block_objs(16).ids_blocks.shape
-            == ix.with_block_objs(16).ids_blocks.shape)
+    np.testing.assert_array_equal(np.asarray(back.fps_blocks),
+                                  np.asarray(ix.fps_blocks))
+    np.testing.assert_array_equal(np.asarray(back.blocks_head),
+                                  np.asarray(ix.blocks_head))
 
 
 def test_index_arrays_save_load_roundtrip(tmp_path, built_index):

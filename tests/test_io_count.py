@@ -76,6 +76,41 @@ def test_blockified_native_build_keeps_nio_model_inputs(built_index,
     np.testing.assert_array_equal(inf, 2 * np.asarray(fus.nio_table))
 
 
+def test_masked_padding_rows_are_io_inert(built_index, clustered_data):
+    """A padded/masked serving row (the BatchQueue's tick padding) must be
+    invisible to the Eq. 6/7 I/O model: its probe trace stays unprobed (-1
+    everywhere), so the io_count replay charges it ZERO I/Os, its runtime
+    counters are zero, and the real rows' trace/counters are bit-identical
+    to an unpadded dispatch."""
+    from repro.core import SearchEngine
+
+    engine = SearchEngine(built_index)
+    p = built_index.params
+    q = clustered_data["queries"][:12]
+    pad = np.full((4, q.shape[1]), 1e6, dtype=np.float32)  # poison padding
+    valid = np.array([True] * 12 + [False] * 4)
+    res = engine.query(np.concatenate([q, pad]), plan="fused", k=1,
+                       valid=valid, collect_probe_sizes=True)
+    ref = engine.query(q, plan="fused", k=1, collect_probe_sizes=True)
+
+    sizes = np.asarray(res.probe_sizes)
+    assert (sizes[12:] == -1).all(), "masked rows probed buckets"
+    replay = nio_for_block_size(sizes, s_cap=p.S, block_bytes=p.block_bytes)
+    assert (replay[12:] == 0).all(), "replay charged I/O to masked rows"
+    np.testing.assert_array_equal(replay, np.asarray(res.nio))
+    for name in ("nio_table", "nio_blocks", "cands_checked",
+                 "radii_searched"):
+        field = np.asarray(getattr(res, name))
+        assert (field[12:] == 0).all(), f"masked rows counted {name}"
+        np.testing.assert_array_equal(field[:12],
+                                      np.asarray(getattr(ref, name)))
+    assert not np.asarray(res.found)[12:].any()
+    np.testing.assert_array_equal(np.asarray(res.probe_sizes)[:12],
+                                  np.asarray(ref.probe_sizes))
+    np.testing.assert_array_equal(np.asarray(res.ids)[:12],
+                                  np.asarray(ref.ids))
+
+
 def test_block_objs_for():
     assert block_objs_for(512) == 99
     assert block_objs_for(128) == (128 - 16) // 5

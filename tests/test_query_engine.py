@@ -9,8 +9,9 @@ the `s_cap` and `block_objs` override knobs. `plan="host"` (the pre-fusion
 per-radius host loop) must match as well: early exit only skips radii no
 query would use.
 
-The seed's free functions survive as deprecated wrappers for one PR; they
-are exercised here (and ONLY here) under pytest.deprecated_call.
+The seed's free functions were deprecated wrappers for exactly one PR and
+are now deleted; test_legacy_wrapper_surface_is_gone pins the removal
+(`make deprecation-lane` asserts the same at import time).
 """
 import jax
 import jax.numpy as jnp
@@ -180,51 +181,49 @@ def test_queryconfig_replace_constructor_path():
 
 
 # --------------------------------------------------------------------------
-# Deprecated wrappers: still correct, still warning, for exactly one PR.
-# pytest.ini turns repro-internal DeprecationWarnings into errors, so these
-# wrappers cannot be reached from inside src/repro — only via this suite.
+# Legacy wrapper surface: deprecated for exactly one PR (PR 2), deleted now.
 # --------------------------------------------------------------------------
 
-def test_deprecated_wrappers_warn_and_match(engine, built_index, clustered_data):
-    from repro.core import (ensure_fused_arrays, make_query_fn, query_batch,
-                            query_batch_adaptive, query_batch_adaptive_host,
-                            query_batch_fused)
-    q = jnp.asarray(clustered_data["queries"][:8])
-    cfg = engine.config(k=2)
-    ix = engine.arrays(cfg.block_objs)
-    ref = engine.query(q, plan="oracle", k=2)
+def test_legacy_wrapper_surface_is_gone(built_index):
+    """ROADMAP schedule: the one-PR migration shims must be deleted, not
+    warning. New code has exactly one entry point: SearchEngine."""
+    import repro.core as core
+    import repro.core.distributed as dist
+    import repro.core.query as query
+    from repro.core import E2LSHoS
+    from repro.core.index import E2LSHIndex, IndexArrays
 
-    with pytest.deprecated_call():
-        legacy_dict = ensure_fused_arrays(built_index.index.arrays.as_dict(),
-                                          cfg.block_objs)
-    assert "ids_blocks" in legacy_dict
-    for fn, exact in ((query_batch, True), (query_batch_fused, True),
-                      (query_batch_adaptive, True),
-                      (query_batch_adaptive_host, False)):
-        with pytest.deprecated_call():
-            out = fn(legacy_dict, q, cfg)
-        if exact:
-            _assert_identical(ref, out)
-        else:
-            assert np.mean(np.asarray(out.ids) == np.asarray(ref.ids)) > 0.95
-    # wrappers also accept the typed pytree directly
-    with pytest.deprecated_call():
-        out = query_batch_fused(ix, q, cfg)
-    _assert_identical(ref, out)
-    with pytest.deprecated_call():
-        mq_cfg, mq_fn = make_query_fn(built_index.params, k=2, engine="fused")
-    assert mq_cfg == cfg
-    _assert_identical(ref, mq_fn(ix, q))
+    for name in ("query_batch", "query_batch_fused", "query_batch_adaptive",
+                 "query_batch_adaptive_host", "ensure_fused_arrays",
+                 "make_query_fn"):
+        assert not hasattr(core, name), f"repro.core.{name} resurfaced"
+        assert not hasattr(query, name), f"core.query.{name} resurfaced"
+        assert name not in core.__all__ and name not in query.__all__
+    assert not hasattr(dist, "sharded_query")
+    assert "sharded_query" not in dist.__all__
+    for cls, name in ((IndexArrays, "from_dict"), (IndexArrays, "as_dict"),
+                      (E2LSHIndex, "as_arrays"), (E2LSHoS, "arrays"),
+                      (E2LSHoS, "fused_arrays")):
+        assert not hasattr(cls, name), f"{cls.__name__}.{name} resurfaced"
+    # the typed field (NOT the deleted dict accessor) is still the index API
+    assert isinstance(built_index.index.arrays, IndexArrays)
+    with pytest.raises(TypeError):
+        built_index.query(np.zeros((2, built_index.params.d)), engine="oracle")
 
 
-def test_deprecated_e2lshos_accessors_warn(built_index, clustered_data):
-    with pytest.deprecated_call():
-        d = built_index.arrays()
-    assert "table_off" in d and "ids_blocks" in d
-    with pytest.deprecated_call():
-        d2 = built_index.fused_arrays()
-    assert "ids_blocks" in d2
-    with pytest.deprecated_call():
-        built_index.index.as_arrays()
-    with pytest.deprecated_call():
-        built_index.query(clustered_data["queries"][:2], engine="oracle")
+def test_masked_query_rows_are_inert(engine, clustered_data):
+    """The serving-queue seam: a padded batch with a valid mask returns
+    bit-identical rows for the real queries and INVALID/inf/zero-I/O rows
+    for the masked padding (every plan)."""
+    q = clustered_data["queries"][:9]
+    pad = np.concatenate([q, np.full((7, q.shape[1]), 50.0, np.float32)])
+    valid = np.arange(16) < 9
+    for plan in ("fused", "oracle"):
+        ref = engine.query(q, plan=plan, k=2)
+        out = engine.query(pad, plan=plan, k=2, valid=valid)
+        _assert_identical(ref, out.slice_rows(0, 9))
+        tail = out.slice_rows(9, 16)
+        assert (np.asarray(tail.ids) == np.int32(2**31 - 1)).all()
+        assert np.isinf(np.asarray(tail.dists)).all()
+        assert not np.asarray(tail.found).any()
+        assert (np.asarray(tail.nio) == 0).all()
