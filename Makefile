@@ -1,7 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify test bench-query bench-smoke deprecation-lane kernel-lane deps
+.PHONY: verify test bench-query bench-smoke deprecation-lane kernel-lane \
+	storage-lane deps
 
 deps:
 	$(PY) -m pip install -r requirements.txt
@@ -48,3 +49,12 @@ deprecation-lane:
 kernel-lane:
 	REPRO_FORCE_PALLAS=interpret $(PY) -m pytest \
 	tests/test_kernels.py tests/test_force_pallas_lane.py -q
+
+# external-storage lane: spill/load round-trips + plan="external" parity
+# (mem/mmap/aio backends over a tmpdir-backed index) under the forced
+# interpret kernel path, so the split dispatch runs the REAL kernel
+# programs off-TPU; the measured-vs-replay N_io tie-out rides along.
+storage-lane:
+	REPRO_FORCE_PALLAS=interpret $(PY) -m pytest \
+	tests/test_storage_external.py \
+	tests/test_io_count.py::test_external_plan_measured_nio_matches_replay -q

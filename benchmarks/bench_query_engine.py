@@ -71,7 +71,23 @@ WORKLOADS = {
 PLAN_STAT_KEYS = ("qps", "p50_dispatch_ms", "mean_dispatch_ms",
                   "min_dispatch_ms", "nio_mean", "radii_mean")
 PAYLOAD_KEYS = ("backend", "repeats", "seed", "workloads",
-                "speedup_fused_vs_host", "serving_queue", "parity")
+                "speedup_fused_vs_host", "serving_queue", "external_storage",
+                "parity")
+
+# external_storage section: measured mmap (sync QD1) vs aio (async QD-qd)
+# on a spilled index, next to the Eq. 6/7 model predictions. The workload
+# shape is repro.storage.HEAVY_SPEC — ONE definition shared with
+# `sync_vs_async --measured` so both lanes measure the same storage-bound
+# regime (heavy buckets + deep S budget -> ~50 block reads/query). On a
+# page-cached spill the absolute gap is structurally smaller than the
+# paper's real-SSD 19.7x; the fetch lane (block reads only) carries the
+# undiluted discipline comparison.
+EXTERNAL_STAT_KEYS = ("t_query_us_sync", "t_query_us_async",
+                      "measured_slowdown_sync_vs_async",
+                      "fetch_slowdown_sync_vs_async", "cache_hit_rate",
+                      "measured_nio_per_query", "model_t_sync_us",
+                      "model_t_async_us", "model_slowdown_sync_vs_async",
+                      "model_vs_measured_slowdown_ratio", "parity_external")
 
 # serving-queue section: per-arrival-rate stat block
 QUEUE_STAT_KEYS = ("qps_queued", "qps_direct", "speedup_queued_vs_direct",
@@ -260,6 +276,73 @@ def run_serving_queue(*, k: int, repeats: int, seed: int) -> dict:
     return out
 
 
+def run_external_storage(*, k: int, repeats: int, seed: int,
+                         light: bool = False) -> dict:
+    """Measured T_sync vs T_async on the REAL storage subsystem (the Fig.
+    11/13 story, measured): build, spill, and query the same index through
+    the mmap (sync QD1) and aio (async fan-out + clock cache + prefetch)
+    BlockStore backends, then put the Eq. 6/7 model's predictions (paper
+    device constants) next to the measurements. Bit-exact parity with the
+    in-memory fused plan is asserted every run; the aio-beats-mmap bar is
+    enforced on full runs only (smoke stays timing-insensitive)."""
+    import tempfile
+
+    from repro.storage import (HEAVY_SPEC, heavy_bucket_workload,
+                               load_external, measure_backends)
+
+    spec = dict(HEAVY_SPEC)
+    if light:   # --smoke: schema + parity only, timing-insensitive
+        spec.update(n=4000, queries=32, max_L=8, s_cap=64)
+    idx, qs = heavy_bucket_workload(spec, seed=seed)
+    n, d, Q = spec["n"], spec["d"], spec["queries"]
+    with tempfile.TemporaryDirectory(prefix="bench_spill_") as tmp:
+        spill_path = pathlib.Path(tmp) / "index.e2l"
+        m = measure_backends(idx, qs, spill_path=spill_path, k=k,
+                             s_cap=spec["s_cap"], qd=spec["qd"],
+                             repeats=max(3, repeats))
+
+        # parity: external (aio) == in-memory fused, bit-exact, every run
+        engine = SearchEngine(idx)
+        ref = engine.query(jnp.asarray(qs), plan="fused", k=k,
+                           s_cap=spec["s_cap"])
+        with load_external(spill_path, backend="aio", qd=spec["qd"]) as ext:
+            out = SearchEngine(ext).query(qs, k=k, s_cap=spec["s_cap"])
+            for f in ("ids", "dists", "found", "radii_searched", "nio_table",
+                      "nio_blocks", "cands_checked"):
+                assert np.array_equal(np.asarray(getattr(ref, f)),
+                                      np.asarray(getattr(out, f))), \
+                    f"external plan diverged from fused on {f}"
+
+    fetch_slowdown = (m["sync"]["fetch_ms"] / m["async_"]["fetch_ms"]
+                      if m["async_"]["fetch_ms"] > 0 else float("inf"))
+    stats = dict(
+        t_query_us_sync=m["sync"]["t_query_us"],
+        t_query_us_async=m["async_"]["t_query_us"],
+        measured_slowdown_sync_vs_async=m["measured_slowdown_sync_vs_async"],
+        fetch_slowdown_sync_vs_async=fetch_slowdown,
+        cache_hit_rate=m["async_"]["cache_hit_rate"],
+        measured_nio_per_query=m["sync"]["nio_mean"],
+        model_t_sync_us=m["model"]["t_sync_us"],
+        model_t_async_us=m["model"]["t_async_us"],
+        model_slowdown_sync_vs_async=m["model"]["slowdown_sync_vs_async"],
+        model_vs_measured_slowdown_ratio=m["model_vs_measured_slowdown_ratio"],
+        parity_external="external(aio) == fused bit-exact (asserted)",
+        params=dict(n=n, d=d, queries=Q, k=k, s_cap=spec["s_cap"],
+                    max_L=spec["max_L"], qd=spec["qd"],
+                    model_config=m["model"]["config"],
+                    note="spill served from the OS page cache: the measured "
+                         "gap is request-handling + queue-depth overhead, "
+                         "not SSD latency; the paper measures 19.7x on a "
+                         "real cSSD (Sec. 6.5)"),
+    )
+    print(f"[external  ] sync {stats['t_query_us_sync']:7.0f} us/q vs async "
+          f"{stats['t_query_us_async']:7.0f} us/q "
+          f"({stats['measured_slowdown_sync_vs_async']:.2f}x; fetch lane "
+          f"{fetch_slowdown:.2f}x; hit {stats['cache_hit_rate']:.2f}; "
+          f"model {stats['model_slowdown_sync_vs_async']:.2f}x)")
+    return stats
+
+
 def check_schema(payload: dict):
     """Assert the BENCH_query.json shape the trajectory tooling depends on."""
     for key in PAYLOAD_KEYS:
@@ -277,6 +360,11 @@ def check_schema(payload: dict):
         for key in QUEUE_STAT_KEYS:
             assert key in sq[rate], f"missing serving_queue/{rate}/{key}"
         assert sq[rate]["speedup_queued_vs_direct"] > 0
+    es = payload["external_storage"]
+    assert "params" in es
+    for key in EXTERNAL_STAT_KEYS:
+        assert key in es, f"missing external_storage/{key}"
+    assert es["measured_nio_per_query"] > 0
 
 
 def main(argv=None):
@@ -299,6 +387,8 @@ def main(argv=None):
                  for name, spec in WORKLOADS.items()}
     serving_queue = run_serving_queue(k=args.k, repeats=args.repeats,
                                       seed=args.seed)
+    external_storage = run_external_storage(k=args.k, repeats=args.repeats,
+                                            seed=args.seed, light=args.smoke)
     # acceptance headline: one dispatch replacing per-radius dispatch + sync,
     # measured where dispatch structure dominates (serving latency shape)
     speedup = workloads["latency"]["speedup_fused_vs_host"]
@@ -309,21 +399,28 @@ def main(argv=None):
         workloads=workloads,
         speedup_fused_vs_host=speedup,
         serving_queue=serving_queue,
+        external_storage=external_storage,
         parity="oracle<->fused ids bit-identical; host held to the tolerant "
-               "cross-jit contract; queued == direct bit-exact per request "
+               "cross-jit contract; queued == direct bit-exact per request; "
+               "external(aio) == fused bit-exact on a spilled index "
                "(all asserted every run)",
     )
     check_schema(payload)
     if not args.smoke:
-        # acceptance bar for the serving queue (full runs only; the 2-repeat
-        # smoke pass keeps CI timing-insensitive)
+        # acceptance bars (full runs only; the 2-repeat smoke pass keeps CI
+        # timing-insensitive)
         assert serving_queue["high"]["speedup_queued_vs_direct"] >= 2.0, \
             "queued qps fell below 2x direct at high arrival rate"
+        assert external_storage["measured_slowdown_sync_vs_async"] > 1.0, \
+            "aio backend failed to beat the mmap sync baseline"
     pathlib.Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
     tag = "smoke: schema OK; " if args.smoke else ""
     print(f"{tag}headline: fused {speedup:.2f}x over pre-refactor host path; "
           f"queued {serving_queue['high']['speedup_queued_vs_direct']:.2f}x "
-          f"direct at high arrival rate; wrote {out_path}")
+          f"direct at high arrival rate; measured sync/async "
+          f"{external_storage['measured_slowdown_sync_vs_async']:.2f}x "
+          f"(model {external_storage['model_slowdown_sync_vs_async']:.2f}x); "
+          f"wrote {out_path}")
     return payload
 
 

@@ -74,6 +74,39 @@ class ShardedIndexArrays:
             lane_pad=self.arrays.lane_pad,
         )
 
+    def with_block_objs(self, block_objs: int,
+                        lane_pad: Optional[int] = None) -> "ShardedIndexArrays":
+        """Re-blockify EVERY shard's block store at a new block size (the
+        timing knob, ROADMAP "sharded block_objs knob"): each shard's CSR
+        slice repacks through `blockify_entries` (padded entries sit behind
+        table_cnt, so they are never read), and the per-shard stores re-pad
+        to the new common row count. Same-size requests return self."""
+        from ..kernels.bucket_probe.ops import blockify_entries
+
+        ix = self.arrays
+        lp = ix.lane_pad if lane_pad is None else int(lane_pad)
+        if int(block_objs) == ix.block_objs and lp == ix.lane_pad:
+            return self
+        per_shard = []
+        for s in range(self.num_shards):
+            ids_b, fps_b, head, _ = blockify_entries(
+                np.asarray(ix.entries_id[s]), np.asarray(ix.entries_fp[s]),
+                np.asarray(ix.table_off[s]), np.asarray(ix.table_cnt[s]),
+                int(block_objs), lane_pad=lp)
+            per_shard.append((np.asarray(ids_b), np.asarray(fps_b),
+                              np.asarray(head)))
+        NB_max = max(p[0].shape[0] for p in per_shard)
+        arrays = dataclasses.replace(
+            ix,
+            ids_blocks=jnp.asarray(np.stack(
+                [_pad_rows(p[0], NB_max, int(_INVALID)) for p in per_shard])),
+            fps_blocks=jnp.asarray(np.stack(
+                [_pad_rows(p[1], NB_max, -1) for p in per_shard])),
+            blocks_head=jnp.asarray(np.stack([p[2] for p in per_shard])),
+            block_objs=int(block_objs), lane_pad=lp,
+        )
+        return dataclasses.replace(self, arrays=arrays)
+
 
 def _pad_rows(x: np.ndarray, rows: int, fill) -> np.ndarray:
     pad = rows - x.shape[0]
@@ -243,7 +276,12 @@ def sharded_query_result(
     assert sh == sharded.num_shards, (sh, sharded.num_shards)
     base_S = int(s_cap or p.S)
     cap = s_cap_per_shard or max(4 * k, -(-base_S // sharded.num_shards))
-    cfg = QueryConfig.from_params(p, k=k).replace(s_cap=int(cap))
+    # the executor's chunking follows the ARRAYS' layout (a re-blockified
+    # stack carries its block size as static metadata); both local plans
+    # read the same cfg, which keeps the sharded/oracle parity intact
+    bo = sharded.arrays.block_objs
+    cfg = QueryConfig.from_params(p, k=k).replace(
+        s_cap=int(cap), block_objs=(bo if bo != p.block_objs else None))
     if valid is None:
         valid = jnp.ones((queries.shape[0],), dtype=bool)
 

@@ -122,6 +122,17 @@ class IndexArrays:
             block_objs=int(block_objs), lane_pad=lp,
         )
 
+    def spill(self, path, *, params=None, stats=None) -> None:
+        """Write this index to ``path`` in the external-memory spill format
+        (page-aligned sections, versioned header; see docs/storage.md).
+        ``repro.storage.load_arrays`` round-trips every leaf bit-for-bit;
+        ``repro.storage.load_external`` serves the file under
+        ``plan="external"`` (pass ``params`` — or spill via
+        ``E2LSHIndex.spill``, which includes them — to make the file
+        servable)."""
+        from ..storage.format import spill_index
+        spill_index(path, self, params=params, stats=stats)
+
     def with_block_objs(self, block_objs: int,
                         lane_pad: Optional[int] = None) -> "IndexArrays":
         """Re-blockify under a different block size (the timing knob). The
@@ -204,6 +215,12 @@ class E2LSHIndex:
             params=np.array([dataclasses.asdict(self.params)], dtype=object),
             stats=np.array([dataclasses.asdict(self.stats)], dtype=object),
         )
+
+    def spill(self, path: str | pathlib.Path) -> None:
+        """Spill to the external-memory format WITH params + build stats, so
+        ``repro.storage.load_external(path)`` can serve the file directly
+        (block rows on disk, hash tables resident)."""
+        self.arrays.spill(path, params=self.params, stats=self.stats)
 
     @staticmethod
     def load(path: str | pathlib.Path) -> "E2LSHIndex":

@@ -31,6 +31,15 @@ Plans over a single-device `IndexArrays`:
 * ``plan="host"``   — the pre-fusion host-driven loop (one jitted call + one
   device->host sync per radius), kept for benchmarking dispatch overhead.
 
+Plans over an `ExternalIndex` (repro.storage.load_external — block rows on
+disk, hash tables resident):
+
+* ``plan="external"`` — the split dispatch: hash + table lookup + chain
+  planning on device, block fetches through the pluggable BlockStore on
+  host (batched per rung, next rung prefetched under the distance
+  epilogue), Step-3 epilogue back on device. Bit-exact with plan="fused"
+  on a spilled copy of the same index (repro.storage.external).
+
 Plans over a `ShardedIndexArrays` (requires `mesh=`):
 
 * ``plan="sharded"`` — the fused engine dispatched per device inside
@@ -597,6 +606,7 @@ class SearchEngine:
 
     SINGLE_PLANS = ("fused", "host", "oracle")
     SHARDED_PLANS = ("sharded", "oracle")
+    EXTERNAL_PLANS = ("external",)
 
     def __init__(self, index, *, mesh=None, index_axes=("shard",),
                  query_axes=()):
@@ -606,12 +616,19 @@ class SearchEngine:
         self.mesh = mesh
         self.index_axes = tuple(index_axes)
         self.query_axes = tuple(query_axes)
+        self._single = self._sharded = self._external = None
+        if hasattr(index, "store") and hasattr(index, "blocks_head"):
+            # ExternalIndex (repro.storage): block rows live on disk behind
+            # the BlockStore; there is no in-memory IndexArrays to serve
+            self._external = index
+            self._base_block_objs = index.block_objs
+            self._by_block_objs = {}
+            return
         if hasattr(index, "num_shards"):      # ShardedIndexArrays
             self._sharded = index
-            self._single = None
+            self._sharded_by_bo = {index.arrays.block_objs: index}
         else:                                  # E2LSHIndex
             self._single = index
-            self._sharded = None
         base: IndexArrays = index.arrays
         self._by_block_objs = {base.block_objs: base}
         self._base_block_objs = base.block_objs
@@ -619,34 +636,51 @@ class SearchEngine:
     # -- introspection ------------------------------------------------------
     @property
     def plans(self) -> tuple:
+        if self._external is not None:
+            return self.EXTERNAL_PLANS
         return self.SHARDED_PLANS if self._sharded is not None else self.SINGLE_PLANS
 
     @property
     def default_plan(self) -> str:
+        if self._external is not None:
+            return "external"
         return "sharded" if self._sharded is not None else "fused"
+
+    @property
+    def last_external_stats(self):
+        """Instrumentation of the most recent plan="external" call (measured
+        N_io, cache hit rate, per-rung fetch/compute overlap) — None for
+        in-memory engines."""
+        return (self._external.last_plan_stats
+                if self._external is not None else None)
 
     # -- typed array access -------------------------------------------------
     def arrays(self, block_objs: Optional[int] = None) -> IndexArrays:
-        """The typed index pytree, re-blockified (and memoized) on demand."""
+        """The typed index pytree, re-blockified (and memoized) on demand.
+        On a sharded engine this repacks EVERY shard's store and re-pads the
+        stacked rows to the new common extent (once per block size)."""
+        if self._external is not None:
+            raise ValueError(
+                "an external index keeps its block rows on disk — there is "
+                "no in-memory IndexArrays to serve. Use plan=\"external\" "
+                "(the BlockStore streams the rows), or materialize the full "
+                f"pytree with repro.storage.load_arrays({self._external.path!r})")
         bo = int(block_objs or self._base_block_objs)
+        if self._sharded is not None:
+            return self._sharded_for(bo).arrays
         if bo not in self._by_block_objs:
-            if self._sharded is not None:
-                # Known gap (ROADMAP "sharded block_objs knob"): repacking a
-                # stacked per-shard store means re-blockifying each shard's
-                # CSR slice and re-padding NB to a new common extent — not
-                # implemented. The raise is pinned by tests/test_distributed.
-                raise NotImplementedError(
-                    "per-shard re-blockification is not implemented: a "
-                    "ShardedIndexArrays stacks every shard's block store "
-                    "padded to a common row count, so changing block_objs="
-                    f"{bo} (built at {self._base_block_objs}) requires "
-                    "repacking each shard and re-padding. Rebuild with "
-                    "build_sharded_index(...) at the desired block size, or "
-                    "use a single-device SearchEngine for the block_objs "
-                    "timing knob.")
             self._by_block_objs[bo] = (
                 self._by_block_objs[self._base_block_objs].with_block_objs(bo))
         return self._by_block_objs[bo]
+
+    def _sharded_for(self, block_objs: Optional[int]):
+        """The (memoized) ShardedIndexArrays re-blockified per shard at the
+        requested block size (ROADMAP "sharded block_objs knob")."""
+        bo = int(block_objs or self._base_block_objs)
+        if bo not in self._sharded_by_bo:
+            self._sharded_by_bo[bo] = (
+                self._sharded_by_bo[self._base_block_objs].with_block_objs(bo))
+        return self._sharded_by_bo[bo]
 
     def config(self, *, k: int = 1, collect_probe_sizes: bool = False,
                s_cap: Optional[int] = None, max_chain: int = 0,
@@ -683,6 +717,23 @@ class SearchEngine:
         queries = jnp.asarray(queries)
         if valid is not None:
             valid = jnp.asarray(valid, dtype=bool)
+        if self._external is not None:
+            if plan not in self.EXTERNAL_PLANS:
+                raise ValueError(
+                    f"unknown plan {plan!r} for an external index; expected "
+                    f"one of {self.EXTERNAL_PLANS} (load the index in memory "
+                    "for the fused/oracle plans)")
+            if s_cap_per_shard is not None:
+                raise ValueError("s_cap_per_shard only applies to sharded "
+                                 "plans")
+            # the on-disk layout is fixed at spill time: the store's block
+            # size is the ONLY valid cfg.block_objs (external_plan enforces)
+            bo = (block_objs if block_objs is not None
+                  else self._external.block_objs)
+            cfg = self.config(k=k, collect_probe_sizes=collect_probe_sizes,
+                              s_cap=s_cap, block_objs=bo)
+            from ..storage.external import external_plan
+            return external_plan(self._external, queries, cfg, valid)
         if self._sharded is not None:
             if plan not in self.SHARDED_PLANS:
                 raise ValueError(
@@ -691,13 +742,11 @@ class SearchEngine:
             if collect_probe_sizes:
                 raise ValueError("collect_probe_sizes is not supported under "
                                  "the sharded plans")
-            if block_objs is not None:
-                self.arrays(block_objs)  # raises NotImplementedError
             if self.mesh is None:
                 raise ValueError("sharded plans need SearchEngine(..., mesh=)")
             from .distributed import sharded_query_result
             return sharded_query_result(
-                self._sharded, queries, self.mesh, k=k,
+                self._sharded_for(block_objs), queries, self.mesh, k=k,
                 index_axes=self.index_axes, query_axes=self.query_axes,
                 s_cap=s_cap, s_cap_per_shard=s_cap_per_shard,
                 local_plan="fused" if plan == "sharded" else "oracle",
@@ -733,18 +782,35 @@ class SearchEngine:
         dispatch target of serving.BatchQueue (valid [Q] bool; masked rows
         inert)."""
         plan = plan or self.default_plan
+        if self._external is not None:
+            if plan not in self.EXTERNAL_PLANS:
+                raise ValueError(
+                    f"unknown plan {plan!r} for an external index; expected "
+                    f"one of {self.EXTERNAL_PLANS}")
+            bo = kw.pop("block_objs", None)
+            cfg = self.config(k=k, block_objs=(
+                bo if bo is not None else self._external.block_objs), **kw)
+            from ..storage.external import external_plan
+            ext = self._external
+            if masked:
+                def fn(queries, valid):
+                    return external_plan(ext, queries, cfg, valid)
+            else:
+                def fn(queries):
+                    return external_plan(ext, queries, cfg)
+            return cfg, fn
         if self._sharded is not None:
             # the sharded executor rebuilds its per-shard config from params
             # (sharded_query_result applies the S budget internally), so any
             # knob it cannot honor must be REJECTED here — silently accepting
-            # block_objs/collect_probe_sizes/max_chain would return a cfg
-            # that lies about the executed plan
+            # collect_probe_sizes/max_chain would return a cfg that lies
+            # about the executed plan. block_objs IS honored now: the stack
+            # is re-blockified per shard (memoized) and the executor derives
+            # its chunking from the arrays' layout.
             s_cap_per_shard = kw.pop("s_cap_per_shard", None)
             if kw.get("collect_probe_sizes"):
                 raise ValueError("collect_probe_sizes is not supported under "
                                  "the sharded plans")
-            if kw.get("block_objs") is not None:
-                self.arrays(kw["block_objs"])  # raises NotImplementedError
             if kw.get("max_chain"):
                 raise ValueError("max_chain override is not supported under "
                                  "the sharded plans (the per-shard schedule "
@@ -753,8 +819,10 @@ class SearchEngine:
                                  "max_chain"}
             if unknown:
                 raise TypeError(f"unexpected plan kwargs {sorted(unknown)}")
+            sh = self._sharded_for(kw.get("block_objs"))
             # the returned cfg reflects the pre-shard schedule
-            cfg = self.config(k=k, s_cap=kw.get("s_cap"))
+            cfg = self.config(k=k, s_cap=kw.get("s_cap"),
+                              block_objs=kw.get("block_objs"))
 
             if masked:
                 # the serving queue's dispatch target: ONE jitted program per
@@ -769,7 +837,7 @@ class SearchEngine:
                     raise ValueError("sharded plans need SearchEngine(..., "
                                      "mesh=)")
                 from .distributed import sharded_query_result
-                sh, mesh = self._sharded, self.mesh
+                mesh = self.mesh
                 index_axes, query_axes = self.index_axes, self.query_axes
                 s_cap = kw.get("s_cap")
                 local_plan = "fused" if plan == "sharded" else "oracle"
@@ -790,9 +858,11 @@ class SearchEngine:
                                jnp.asarray(valid, dtype=bool))
             else:
                 s_cap = kw.get("s_cap")
+                block_objs = kw.get("block_objs")
 
                 def fn(queries):
                     return self.query(queries, plan=plan, k=k, s_cap=s_cap,
+                                      block_objs=block_objs,
                                       s_cap_per_shard=s_cap_per_shard)
 
             return cfg, fn

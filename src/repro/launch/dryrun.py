@@ -367,6 +367,72 @@ def run_queue_cell(*, ladder=(8, 32, 128), tick_us: float = 200.0,
     return rec
 
 
+def run_external_store_cell(*, store: str = "aio", qd: int = 16,
+                            n: int = 6000, d: int = 16,
+                            n_queries: int = 48, k: int = 4) -> dict:
+    """External-storage serving cell: build a small index, SPILL it, and
+    drive plan="external" through the selected BlockStore backend —
+    recording the split dispatch's compile bill (setup + fold programs),
+    measured N_io vs the runtime counters, cache hit rate, and per-rung
+    fetch/compute overlap. The storage twin of the --queue warmup cell."""
+    import pathlib
+    import tempfile
+
+    from ..core import E2LSHoS, SearchEngine
+    from ..storage import load_external
+
+    t0 = time.time()
+    rec = {"arch": "e2lshos-external-store", "shape": f"ann_q{n_queries}_k{k}",
+           "mesh": "single-device", "params": 0, "store": store, "qd": qd}
+    try:
+        rng = np.random.default_rng(0)
+        centers = rng.normal(size=(16, d)).astype(np.float32)
+        db = (centers[rng.integers(0, 16, n)]
+              + 0.15 * rng.normal(size=(n, d))).astype(np.float32)
+        qs = (db[rng.choice(n, n_queries, replace=False)]
+              + 0.05 * rng.normal(size=(n_queries, d))).astype(np.float32)
+        s = float(np.median(np.linalg.norm(db - db.mean(0), axis=1))) / 3
+        idx = E2LSHoS.build(db / s, gamma=0.7, s_scale=2.0, max_L=16, seed=0)
+        with tempfile.TemporaryDirectory(prefix="dryrun_spill_") as tmp:
+            spill = pathlib.Path(tmp) / "i.e2l"
+            ts = time.time()
+            idx.index.spill(spill)
+            rec["spill"] = dict(bytes=spill.stat().st_size,
+                                seconds=round(time.time() - ts, 2))
+            with load_external(spill, backend=store, qd=qd) as ext:
+                engine = SearchEngine(ext)
+                ts = time.time()
+                res = engine.query(qs / s, k=k)   # compiles setup + fold
+                rec["compile_seconds"] = round(time.time() - ts, 2)
+                ts = time.time()
+                res = engine.query(qs / s, k=k)   # warm pass: steady state
+                rec["warm_seconds"] = round(time.time() - ts, 3)
+                ps = engine.last_external_stats
+                rec["io"] = dict(
+                    measured_nio_blocks=ps.measured_nio_blocks,
+                    counters_agree=bool(
+                        ps.measured_nio_blocks == ps.nio_blocks_counted),
+                    cache_hit_rate=round(ps.cache_hit_rate, 4),
+                    device_reads=ps.io.device_reads,
+                    prefetch_reads=ps.io.prefetch_reads,
+                    nio_mean=float(np.mean(np.asarray(res.nio))),
+                )
+                rec["rungs"] = [
+                    dict(t=r.t, active=r.active_queries,
+                         blocks=r.blocks_fetched,
+                         fetch_ms=round(r.fetch_ms, 2),
+                         prefetch_rows=r.prefetch_rows,
+                         compute_wait_ms=round(r.compute_wait_ms, 2))
+                    for r in ps.rungs]
+        rec["status"] = "OK"
+    except Exception as e:
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {str(e)[:500]}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["seconds"] = round(time.time() - t0, 1)
+    return rec
+
+
 def _depth_variant(cfg, k: int):
     """Return (config with k stack units, units_in_full_model). A unit is one
     layer (dense/moe/ssm), one mamba-group+shared-block (hybrid), or one
@@ -468,6 +534,15 @@ def main():
     ap.add_argument("--queue", action="store_true",
                     help="run the serving-queue shape-ladder warmup cell "
                          "(compile the masked fused plan per ladder rung)")
+    ap.add_argument("--external", action="store_true",
+                    help="run the external-storage cell: spill a small "
+                         "index and drive plan=\"external\" through --store, "
+                         "recording compile bill, measured N_io, hit rate, "
+                         "and per-rung fetch/compute overlap")
+    ap.add_argument("--store", choices=("mem", "mmap", "aio"), default="aio",
+                    help="BlockStore backend for --external")
+    ap.add_argument("--qd", type=int, default=16,
+                    help="aio queue depth for --external")
     ap.add_argument("--ladder", default="8,32,128",
                     help="batch-shape ladder for --queue, comma-separated")
     ap.add_argument("--tick-us", dest="tick_us", type=float, default=200.0,
@@ -503,6 +578,10 @@ def main():
         emit(run_queue_cell(
             ladder=tuple(int(s) for s in args.ladder.split(",")),
             tick_us=args.tick_us, max_batch=args.max_batch))
+        return
+
+    if args.external:
+        emit(run_external_store_cell(store=args.store, qd=args.qd))
         return
 
     if args.ann:

@@ -83,8 +83,65 @@ def serve_ann_queued(args, engine: SearchEngine, queries: np.ndarray,
           f"direct ({t_direct / t_queued:.2f}x)")
 
 
+def serve_ann_external(args, ds):
+    """--store mmap|aio: build, spill, and serve the index FROM STORAGE
+    through plan="external" (block rows on disk behind the selected
+    BlockStore backend; hash tables + coordinates resident)."""
+    import pathlib
+    import tempfile
+
+    from ..storage import load_external
+
+    import contextlib
+
+    idx = E2LSHoS.build(ds.db, gamma=args.gamma, max_L=args.max_L,
+                        seed=args.seed)
+    with contextlib.ExitStack() as stack:
+        if args.spill:     # operator-chosen path: keep the spill around
+            spill = pathlib.Path(args.spill)
+        else:              # scratch spill: cleaned up on exit
+            tmp = stack.enter_context(
+                tempfile.TemporaryDirectory(prefix="serve_spill_"))
+            spill = pathlib.Path(tmp) / "index.e2l"
+        idx.index.spill(spill)
+        print(f"[external] spilled {spill.stat().st_size/1e6:.1f} MB -> "
+              f"{spill} (backend={args.store}, qd={args.qd})")
+        ext = stack.enter_context(
+            load_external(spill, backend=args.store, qd=args.qd))
+        engine = SearchEngine(ext)
+        if args.queue:
+            serve_ann_queued(args, engine, ds.queries, ds.gt_dists,
+                             plan="external")
+            s = ext.store.stats
+            print(f"[external] store: {s.reads} block reads, "
+                  f"hit rate {s.hit_rate:.2f}, {s.device_reads} device reads, "
+                  f"{s.prefetch_reads} prefetched")
+            return
+        _, fn = engine.make_plan_fn(plan="external", k=args.k)
+        jax.block_until_ready(fn(ds.queries).ids)       # warm compiles
+        t0 = time.perf_counter()
+        res = fn(ds.queries)
+        dt = time.perf_counter() - t0
+        ps = engine.last_external_stats
+        ratio = overall_ratio(np.asarray(res.dists), ds.gt_dists[:, :args.k])
+        print(f"[external/{args.store}] ratio={ratio:.4f} "
+              f"nio/query={float(np.mean(np.asarray(res.nio))):.0f} "
+              f"t/query={dt/args.queries*1e6:.0f}us")
+        print(f"[external/{args.store}] measured N_io={ps.measured_nio_blocks} "
+              f"(counters agree: {ps.measured_nio_blocks == ps.nio_blocks_counted}), "
+              f"cache hit rate {ps.cache_hit_rate:.2f}")
+        for r in ps.rungs:
+            print(f"[external/{args.store}]   rung {r.t}: "
+                  f"{r.active_queries} active, {r.blocks_fetched} blocks in "
+                  f"{r.fetch_ms:.1f}ms, prefetched {r.prefetch_rows} under "
+                  f"{r.compute_wait_ms:.1f}ms of compute wait")
+
+
 def serve_ann(args):
     ds = make_dataset(args.dataset, n=args.n, n_queries=args.queries, seed=args.seed)
+    if args.store != "ram":
+        serve_ann_external(args, ds)
+        return
     n_dev = len(jax.devices())
     if n_dev > 1:
         from jax.sharding import Mesh
@@ -179,6 +236,15 @@ def main(argv=None):
                     help="max rows per tick (larger requests spill)")
     ap.add_argument("--ladder", default="8,32,128",
                     help="compiled batch-shape ladder, comma-separated")
+    ap.add_argument("--store", choices=("ram", "mmap", "aio"), default="ram",
+                    help="where bucket blocks live: ram (in-memory plans), "
+                         "or an on-disk spill served by plan=\"external\" "
+                         "through the mmap (sync QD1) or aio (async fan-out "
+                         "+ cache + prefetch) BlockStore backend")
+    ap.add_argument("--qd", type=int, default=16,
+                    help="aio backend queue depth (pread fan-out width)")
+    ap.add_argument("--spill", default=None,
+                    help="spill path for --store mmap|aio (default: tmpdir)")
     ap.add_argument("--gamma", type=float, default=0.8)
     ap.add_argument("--max-L", dest="max_L", type=int, default=32)
     ap.add_argument("--arch", default="mamba2-1.3b")

@@ -319,24 +319,32 @@ class BatchQueue:
 
     # -- observability ------------------------------------------------------
     def stats_summary(self) -> dict:
-        """Aggregate tick stats: occupancy, pad waste, dispatch p50/p99."""
+        """Aggregate tick stats: occupancy, pad waste, dispatch p50/p99.
+        When the engine serves an external index (plan="external"), the
+        block store's cumulative I/O ledger (reads / hits / hit rate) rides
+        along as ``external_store``."""
         log = list(self.tick_log)
         if not log:
-            return dict(ticks=0, dispatches=self.dispatch_count,
-                        rows_served=0)
-        dms = np.asarray([t.dispatch_ms for t in log])
-        slots = sum(t.shape for t in log)
-        rows = sum(t.rows for t in log)
-        return dict(
-            ticks=len(log),
-            dispatches=self.dispatch_count,
-            rows_served=rows,
-            segments=sum(t.segments for t in log),
-            occupancy_mean=float(np.mean([t.occupancy for t in log])),
-            pad_waste=float((slots - rows) / slots),
-            p50_dispatch_ms=float(np.percentile(dms, 50)),
-            p99_dispatch_ms=float(np.percentile(dms, 99)),
-        )
+            out = dict(ticks=0, dispatches=self.dispatch_count,
+                       rows_served=0)
+        else:
+            dms = np.asarray([t.dispatch_ms for t in log])
+            slots = sum(t.shape for t in log)
+            rows = sum(t.rows for t in log)
+            out = dict(
+                ticks=len(log),
+                dispatches=self.dispatch_count,
+                rows_served=rows,
+                segments=sum(t.segments for t in log),
+                occupancy_mean=float(np.mean([t.occupancy for t in log])),
+                pad_waste=float((slots - rows) / slots),
+                p50_dispatch_ms=float(np.percentile(dms, 50)),
+                p99_dispatch_ms=float(np.percentile(dms, 99)),
+            )
+        ext = getattr(self.engine, "_external", None)
+        if ext is not None:
+            out["external_store"] = ext.store.stats.as_dict()
+        return out
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,34 @@
+"""External-memory storage subsystem: the paper's E2LSH-on-Storage, real.
+
+``repro.core.storage`` holds the ANALYTICAL cost model (Eq. 6/7, device
+tables); this package holds the EXECUTABLE storage tier it predicts:
+
+* ``format``     — the versioned, page-aligned on-disk spill format
+  (``IndexArrays.spill`` / ``load_external``);
+* ``blockstore`` — pluggable block-read backends (``mem``/``mmap``/``aio``)
+  with the measured-N_io ledger and the aio clock page cache;
+* ``external``   — ``plan="external"``: device hash/plan + host block
+  fetches + device distance epilogue, with per-rung overlap stats;
+* ``measure``    — the measured sync-vs-async harness shared by
+  ``benchmarks/sync_vs_async.py --measured`` and the BENCH external lane.
+"""
+from .blockstore import (AioBlockStore, BACKENDS, BlockStore, MemBlockStore,
+                         MmapBlockStore, StoreStats, make_store)
+from .external import (ExternalIndex, ExternalPlanStats, RungStats,
+                       external_plan)
+from .format import (FORMAT_VERSION, MAGIC, PAGE_SIZE, SpillHeader,
+                     StorageFormatError, load_arrays, load_external,
+                     read_header, spill_index, verify_file)
+from .measure import (DEFAULT_MODEL_CONFIG, HEAVY_SPEC,
+                      heavy_bucket_workload, measure_backends)
+
+__all__ = [
+    "AioBlockStore", "BACKENDS", "BlockStore", "MemBlockStore",
+    "MmapBlockStore", "StoreStats", "make_store",
+    "ExternalIndex", "ExternalPlanStats", "RungStats", "external_plan",
+    "FORMAT_VERSION", "MAGIC", "PAGE_SIZE", "SpillHeader",
+    "StorageFormatError", "load_arrays", "load_external", "read_header",
+    "spill_index", "verify_file",
+    "DEFAULT_MODEL_CONFIG", "HEAVY_SPEC", "heavy_bucket_workload",
+    "measure_backends",
+]

@@ -1,0 +1,337 @@
+"""Pluggable block-store backends: where bucket block reads actually go.
+
+The external query plan asks one question per chain rung: "give me these
+block rows" (each row = one paper block: ids + fingerprints of up to
+``block_objs`` object infos). The three backends answer it with the three
+I/O disciplines the paper compares:
+
+* ``mem``  — the block store lives in RAM (current in-memory behavior; the
+  parity oracle for the external plan).
+* ``mmap`` — memory-mapped file, one synchronous read per block in request
+  order: queue depth 1, every read blocks before the next is issued. This
+  is the paper's Sec. 6.5 slow baseline — T_sync of Eq. 6.
+* ``aio``  — asynchronous fan-out: a batch of block reads is deduplicated
+  against a clock page cache and the misses are spread across a ``qd``-wide
+  pread pool, emulating io_uring at high queue depth (paper Table 3 /
+  Fig. 11's QD128 lane — T_async of Eq. 7). Supports ``prefetch`` so the
+  plan can overlap the next rung's reads with the distance epilogue.
+
+Every backend counts the same ledger (:class:`StoreStats`): ``reads`` is
+the *logical* block-read count — the measured N_io the Eq. 6/7 validation
+compares against ``io_count.replay_probe_trace`` — while ``device_reads``/
+``cache_hits``/``prefetch_reads`` describe where those reads were served.
+Duplicate rows inside one batch coalesce in the cache (counted as hits):
+that is precisely the page-cache effect the paper's mmap discussion
+describes, and it never changes the logical count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["StoreStats", "BlockStore", "MemBlockStore", "MmapBlockStore",
+           "AioBlockStore", "make_store", "BACKENDS"]
+
+BACKENDS = ("mem", "mmap", "aio")
+
+
+@dataclasses.dataclass
+class StoreStats:
+    """Cumulative I/O ledger of one store (see module docstring)."""
+
+    reads: int = 0            # logical block reads requested (measured N_io)
+    device_reads: int = 0     # demand reads served by the backing store
+    cache_hits: int = 0       # reads served from the page cache
+    prefetch_reads: int = 0   # speculative reads issued by prefetch()
+    read_batches: int = 0     # read_rows() calls
+
+    @property
+    def hit_rate(self) -> float:
+        return self.cache_hits / self.reads if self.reads else 0.0
+
+    def snapshot(self) -> "StoreStats":
+        return dataclasses.replace(self)
+
+    def since(self, base: "StoreStats") -> "StoreStats":
+        return StoreStats(**{f.name: getattr(self, f.name) - getattr(base, f.name)
+                             for f in dataclasses.fields(StoreStats)})
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["hit_rate"] = self.hit_rate
+        return d
+
+
+class BlockStore:
+    """Backend protocol. ``read_rows(rows) -> (ids [G, BLKp], fps [G, BLKp])``
+    int32; row indices address the interleaved ``blocks`` section (row 0 is
+    the guaranteed-empty spare). ``prefetch(rows)`` is advisory and must not
+    change the logical ``reads`` count."""
+
+    name: str = "base"
+    blkp: int
+    nb: int
+
+    def __init__(self):
+        self.stats = StoreStats()
+
+    def read_rows(self, rows: np.ndarray):
+        raise NotImplementedError
+
+    def prefetch(self, rows: np.ndarray) -> None:  # advisory; default no-op
+        return None
+
+    def close(self) -> None:
+        return None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class MemBlockStore(BlockStore):
+    """The block store in RAM — the external plan's parity oracle (identical
+    semantics to the in-memory plans, same counters as the disk backends)."""
+
+    name = "mem"
+
+    def __init__(self, blocks: np.ndarray):
+        super().__init__()
+        assert blocks.ndim == 3 and blocks.shape[1] == 2, blocks.shape
+        self._blocks = np.ascontiguousarray(blocks, dtype=np.int32)
+        self.nb, _, self.blkp = blocks.shape
+
+    def read_rows(self, rows):
+        rows = np.asarray(rows, dtype=np.int64).ravel()
+        out = self._blocks[rows]
+        self.stats.reads += int(rows.size)
+        self.stats.device_reads += int(rows.size)
+        self.stats.read_batches += 1
+        return out[:, 0], out[:, 1]
+
+
+class MmapBlockStore(BlockStore):
+    """Synchronous memory-mapped reads at queue depth 1 (paper Sec. 6.5).
+
+    Each requested block is copied out of the mapping one at a time, in
+    request order — read, wait, read — so a rung's fetch time is the serial
+    sum of per-block read+request costs: the T_sync discipline of Eq. 6.
+    No user-level cache (the kernel page cache is the only one), matching
+    the paper's mmap comparison point.
+    """
+
+    name = "mmap"
+
+    def __init__(self, path, offset: int, nb: int, blkp: int):
+        super().__init__()
+        self.nb, self.blkp = int(nb), int(blkp)
+        self._mm = np.memmap(path, dtype=np.int32, mode="r",
+                             offset=int(offset), shape=(self.nb, 2, self.blkp))
+
+    def read_rows(self, rows):
+        rows = np.asarray(rows, dtype=np.int64).ravel()
+        out = np.empty((rows.size, 2, self.blkp), dtype=np.int32)
+        for i, g in enumerate(rows):        # strictly sequential: QD1
+            out[i] = self._mm[int(g)]
+        self.stats.reads += int(rows.size)
+        self.stats.device_reads += int(rows.size)
+        self.stats.read_batches += 1
+        return out[:, 0], out[:, 1]
+
+    def close(self):
+        self._mm = None
+
+
+class AioBlockStore(BlockStore):
+    """Asynchronous pread fan-out with a clock page cache (the paper's
+    io_uring-at-QD128 discipline, Eq. 7).
+
+    A batch of block reads is resolved in three phases: (1) one VECTORIZED
+    cache lookup — the cache is a preallocated ``[cap, 2, BLKp]`` arena
+    with a row->slot map, so a warm batch is a single numpy gather, not a
+    per-row walk (duplicates inside the batch coalesce; each saved device
+    read counts as a hit); (2) unique misses fan out across ``qd`` pread
+    workers; (3) results land in the arena under the clock policy.
+    ``prefetch`` issues the same fan-out without blocking; in-flight
+    prefetches are joined (not re-read) when a demand read wants the same
+    rows. Batched resolution + fan-out is exactly what "high queue depth"
+    buys the paper's async design — the mmap baseline processes the same
+    rows one synchronous read at a time.
+    """
+
+    name = "aio"
+
+    def __init__(self, path, offset: int, nb: int, blkp: int, *,
+                 qd: int = 16, cache_rows: Optional[int] = None):
+        super().__init__()
+        if qd <= 0:
+            raise ValueError(f"queue depth must be positive, got {qd}")
+        self.nb, self.blkp = int(nb), int(blkp)
+        self.qd = int(qd)
+        self._base = int(offset)
+        self._stride = 2 * self.blkp * 4
+        self._fd = os.open(os.fspath(path), os.O_RDONLY)
+        cap = (max(1024, self.nb // 8) if cache_rows is None
+               else int(cache_rows))
+        self.cache_rows = cap = max(0, min(cap, self.nb))
+        # clock-cache arena: slot_of[row] -> slot (-1 = not cached)
+        self._arena = np.empty((cap, 2, self.blkp), dtype=np.int32)
+        self._slot_of = np.full((self.nb,), -1, dtype=np.int64)
+        self._row_of = np.full((cap,), -1, dtype=np.int64)
+        self._ref = np.zeros((cap,), dtype=bool)
+        self._size = 0
+        self._hand = 0
+        self._lock = threading.Lock()
+        self._inflight: dict = {}       # row -> Future of its prefetch chunk
+        self._pool = ThreadPoolExecutor(max_workers=self.qd,
+                                        thread_name_prefix="aio-blockstore")
+
+    # -- raw device access --------------------------------------------------
+    def _pread_chunk(self, rows: np.ndarray) -> dict:
+        out = {}
+        for g in rows:
+            buf = os.pread(self._fd, self._stride,
+                           self._base + int(g) * self._stride)
+            if len(buf) != self._stride:
+                raise IOError(f"short read at block row {int(g)}")
+            out[int(g)] = np.frombuffer(buf, np.int32).reshape(2, self.blkp)
+        return out
+
+    def _fan_out(self, rows: np.ndarray) -> list:
+        """Split ``rows`` across up to ``qd`` workers; returns the futures."""
+        chunks = np.array_split(rows, min(self.qd, rows.size))
+        return [self._pool.submit(self._pread_chunk, c) for c in chunks]
+
+    # -- clock arena (callers hold the lock) --------------------------------
+    def _alloc_slot(self) -> int:
+        cap = self.cache_rows
+        if self._size < cap:
+            s = self._size
+            self._size += 1
+            return s
+        while self._ref[self._hand]:              # second chance
+            self._ref[self._hand] = False
+            self._hand = (self._hand + 1) % cap
+        s = self._hand
+        self._hand = (self._hand + 1) % cap
+        old = self._row_of[s]
+        if old >= 0:
+            self._slot_of[old] = -1
+        return s
+
+    def _insert(self, g: int, data: np.ndarray) -> None:
+        if self.cache_rows == 0:
+            return
+        s = self._slot_of[g]
+        if s < 0:
+            s = self._alloc_slot()
+            self._row_of[s] = g
+            self._slot_of[g] = s
+        self._arena[s] = data
+        self._ref[s] = True
+
+    # -- the protocol -------------------------------------------------------
+    def read_rows(self, rows):
+        rows = np.asarray(rows, dtype=np.int64).ravel()
+        G = int(rows.size)
+        out = np.empty((G, 2, self.blkp), dtype=np.int32)
+        with self._lock:
+            self.stats.reads += G
+            self.stats.read_batches += 1
+            slots = self._slot_of[rows]
+            hit = slots >= 0
+            if hit.any():                         # ONE gather for the batch
+                hs = slots[hit]
+                out[hit] = self._arena[hs]
+                self._ref[hs] = True
+            miss_rows = np.unique(rows[~hit])
+            waits = [(int(g), self._inflight[int(g)]) for g in miss_rows
+                     if int(g) in self._inflight]
+            wait_set = {g for g, _ in waits}
+            need = np.asarray([g for g in miss_rows
+                               if int(g) not in wait_set], dtype=np.int64)
+            futures = self._fan_out(need) if need.size else []
+        got = {}
+        for fut in futures:
+            got.update(fut.result())
+        for g, fut in waits:             # join in-flight prefetch chunks
+            got[g] = fut.result()[g]
+        if got:
+            with self._lock:
+                for g in need:
+                    self._insert(int(g), got[int(g)])
+                self.stats.device_reads += int(need.size)
+                self.stats.cache_hits += G - int(need.size)
+            for i in np.nonzero(~hit)[0]:
+                out[i] = got[int(rows[i])]
+        else:
+            with self._lock:
+                self.stats.cache_hits += G
+        return out[:, 0], out[:, 1]
+
+    def prefetch(self, rows) -> None:
+        rows = np.unique(np.asarray(rows, dtype=np.int64).ravel())
+        if rows.size == 0 or self.cache_rows == 0:
+            return
+
+        def land(fut, chunk):
+            try:
+                got = fut.result()
+            except Exception:
+                got = {}
+            with self._lock:
+                for g in chunk:
+                    v = got.get(int(g))
+                    if v is not None:
+                        self._insert(int(g), v)
+                    self._inflight.pop(int(g), None)
+
+        with self._lock:
+            cached = self._slot_of[rows] >= 0
+            todo = [int(g) for g in rows[~cached]
+                    if int(g) not in self._inflight]
+            if not todo:
+                return
+            self.stats.prefetch_reads += len(todo)
+            chunks = np.array_split(np.asarray(todo, np.int64),
+                                    min(self.qd, len(todo)))
+            submitted = []
+            for chunk in chunks:
+                fut = self._pool.submit(self._pread_chunk, chunk)
+                for g in chunk:
+                    self._inflight[int(g)] = fut
+                submitted.append((fut, chunk))
+        # register callbacks OUTSIDE the lock: a fast (page-cached) pread can
+        # complete before add_done_callback is reached, in which case the
+        # callback runs inline in THIS thread — land() takes the lock, which
+        # would self-deadlock on the non-reentrant lock if still held
+        for fut, chunk in submitted:
+            fut.add_done_callback(lambda f, c=chunk: land(f, c))
+
+    def close(self):
+        self._pool.shutdown(wait=True)
+        if self._fd is not None:
+            os.close(self._fd)
+            self._fd = None
+
+
+def make_store(backend: str, path, hdr, *, qd: int = 16,
+               cache_rows: Optional[int] = None) -> BlockStore:
+    """Build a backend over a spilled file's ``blocks`` section."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown block-store backend {backend!r}; expected "
+                         f"one of {BACKENDS}")
+    if backend == "mem":
+        from .format import _read_section
+        return MemBlockStore(np.asarray(_read_section(path, hdr, "blocks")))
+    if backend == "mmap":
+        return MmapBlockStore(path, hdr.blocks_offset, hdr.nb, hdr.blkp)
+    return AioBlockStore(path, hdr.blocks_offset, hdr.nb, hdr.blkp,
+                         qd=qd, cache_rows=cache_rows)

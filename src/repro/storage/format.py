@@ -1,0 +1,303 @@
+"""On-disk spill format for an E2LSHoS index (the paper's storage tier).
+
+Layout (all section offsets page-aligned):
+
+    [0:8)    magic  b"E2LSHSPL"
+    [8:12)   format version, uint32 LE (current: 1)
+    [12:16)  header JSON length, uint32 LE
+    [16:20)  header JSON crc32, uint32 LE
+    [20:...) header JSON (utf-8), then zero padding to the first page boundary
+    ...      sections, each starting on a page boundary
+
+The header JSON records the section table (name -> offset/shape/dtype/crc32),
+the layout metadata (``block_objs``, ``lane_pad``), and the solved
+``LSHParams`` (+ build ``IndexStats`` when available), so a spilled file is
+self-describing: ``load_external`` rebuilds a queryable index from the path
+alone.
+
+Section split (paper Sec. 5.1/5.3 mapped onto the repo's layout):
+
+* ``blocks`` — the bucket block store, interleaved ``[NB, 2, BLKp]`` int32
+  (row g = ids row then fps row). This is the STORAGE-RESIDENT section: one
+  paper "block read" = one contiguous ``2 * BLKp * 4``-byte extent, which is
+  what the mmap/aio :class:`~repro.storage.blockstore.BlockStore` backends
+  fetch on demand. The dedicated ids/fps interleave keeps a block read a
+  single I/O, exactly like the paper's 512 B object-info blocks.
+* everything else (hash family ``a/b/rm``, hash tables ``blocks_head`` /
+  ``table_off`` / ``table_cnt``, the CSR derived view ``entries_id`` /
+  ``entries_fp``, and the DRAM tier ``db`` / ``db_norm2``) — RESIDENT
+  sections. ``load_external`` loads only the subset the external plan
+  consumes (family, ``blocks_head``/``table_cnt``, DRAM tier); the CSR
+  view rides the file so ``load_arrays`` can round-trip the full
+  ``IndexArrays`` bit-for-bit without paying for it on every serve open.
+
+Corruption policy: the magic/version/header crc are always verified (clear
+errors instead of garbage indices); per-section crc32s are verified for
+every section ``load_arrays`` materializes. The demand-paged ``blocks``
+section is crc-checked only by ``load_arrays``/``verify_file`` — verifying
+it on ``load_external`` would read the whole store, defeating the point of
+spilling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import zlib
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["StorageFormatError", "SpillHeader", "spill_index", "read_header",
+           "load_arrays", "load_external", "verify_file",
+           "MAGIC", "FORMAT_VERSION", "PAGE_SIZE"]
+
+MAGIC = b"E2LSHSPL"
+FORMAT_VERSION = 1
+PAGE_SIZE = 4096
+
+# resident IndexArrays leaves spilled as standalone sections (the block
+# store spills as the interleaved "blocks" section instead of its
+# ids_blocks/fps_blocks leaves)
+_RESIDENT_FIELDS = ("a", "b", "rm", "blocks_head", "table_off", "table_cnt",
+                    "entries_id", "entries_fp", "db", "db_norm2")
+# ...of which plan="external" actually consumes these; load_external loads
+# ONLY them (the CSR view rides the file for load_arrays round-trips, and
+# reading+crc-checking it on every open would cost as much as the store)
+_EXTERNAL_FIELDS = ("a", "b", "rm", "blocks_head", "table_cnt",
+                    "db", "db_norm2")
+
+
+class StorageFormatError(RuntimeError):
+    """A spilled index file is unreadable: wrong magic, unsupported format
+    version, or failed checksum."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SpillHeader:
+    """Parsed + verified file header."""
+
+    version: int
+    page_size: int
+    block_objs: int
+    lane_pad: int
+    blkp: int                 # padded block-row width (columns per row)
+    nb: int                   # block rows (incl. the spare row 0)
+    sections: dict            # name -> {offset, shape, dtype, crc32, nbytes}
+    params: Optional[dict]    # LSHParams asdict (radii as list) or None
+    stats: Optional[dict]     # IndexStats asdict or None
+
+    @property
+    def blocks_offset(self) -> int:
+        return int(self.sections["blocks"]["offset"])
+
+    @property
+    def block_row_bytes(self) -> int:
+        """One block read's extent: ids row + fps row, int32."""
+        return 2 * self.blkp * 4
+
+
+def _page_pad(n: int, page_size: int) -> int:
+    return -(-n // page_size) * page_size
+
+
+def spill_index(path, arrays, *, params=None, stats=None,
+                page_size: int = PAGE_SIZE) -> SpillHeader:
+    """Write ``arrays`` (an ``IndexArrays``) to ``path`` in the spill format.
+
+    ``params`` (``LSHParams``) should be provided whenever the file is meant
+    to be served (``load_external`` needs it to build a ``SearchEngine``
+    config); ``E2LSHIndex.spill`` passes it automatically.
+    """
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    ids_b = np.ascontiguousarray(np.asarray(arrays.ids_blocks, np.int32))
+    fps_b = np.ascontiguousarray(np.asarray(arrays.fps_blocks, np.int32))
+    if ids_b.shape != fps_b.shape or ids_b.ndim != 2:
+        raise ValueError(f"malformed block store: {ids_b.shape} vs {fps_b.shape}")
+    blocks = np.ascontiguousarray(np.stack([ids_b, fps_b], axis=1))  # [NB, 2, BLKp]
+
+    payload = {"blocks": blocks}
+    for name in _RESIDENT_FIELDS:
+        payload[name] = np.ascontiguousarray(np.asarray(getattr(arrays, name)))
+
+    # lay sections out page-aligned after a (generous) header page budget;
+    # offsets feed the header, so compute the header size with a fixed-point
+    # pass: build the JSON once with placeholder offsets to size it.
+    def header_json(sections: dict) -> bytes:
+        meta = dict(
+            page_size=page_size,
+            block_objs=int(arrays.block_objs),
+            lane_pad=int(arrays.lane_pad),
+            blkp=int(blocks.shape[2]),
+            nb=int(blocks.shape[0]),
+            sections=sections,
+            params=_params_dict(params),
+            stats=dict(stats.__dict__) if stats is not None else None,
+        )
+        return json.dumps(meta, sort_keys=True).encode("utf-8")
+
+    def section_table(base: int) -> dict:
+        table = {}
+        off = base
+        for name, arr in payload.items():
+            table[name] = dict(
+                offset=off, shape=list(arr.shape), dtype=str(arr.dtype),
+                nbytes=int(arr.nbytes),
+                crc32=int(zlib.crc32(arr.tobytes()) & 0xFFFFFFFF),
+            )
+            off = _page_pad(off + arr.nbytes, page_size)
+        return table
+
+    base = _page_pad(20 + len(header_json(section_table(0))), page_size)
+    # a second pass can only grow the JSON by the offset digits; re-pad once
+    base2 = _page_pad(20 + len(header_json(section_table(base))), page_size)
+    sections = section_table(max(base, base2))
+    hdr = header_json(sections)
+    first = min(sec["offset"] for sec in sections.values())
+    assert 20 + len(hdr) <= first, "spill header overflowed its page budget"
+
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(np.uint32(FORMAT_VERSION).tobytes())
+        f.write(np.uint32(len(hdr)).tobytes())
+        f.write(np.uint32(zlib.crc32(hdr) & 0xFFFFFFFF).tobytes())
+        f.write(hdr)
+        for name, arr in payload.items():
+            f.seek(sections[name]["offset"])
+            f.write(arr.tobytes())
+        end = sections[name]["offset"] + payload[name].nbytes
+        f.truncate(_page_pad(end, page_size))
+    return read_header(path)
+
+
+def _params_dict(params) -> Optional[dict]:
+    if params is None:
+        return None
+    d = dict(dataclasses.asdict(params))
+    d["radii"] = list(d["radii"])
+    return d
+
+
+def read_header(path) -> SpillHeader:
+    """Parse and verify the file header (magic, version, crc)."""
+    path = pathlib.Path(path)
+    with open(path, "rb") as f:
+        magic = f.read(8)
+        if magic != MAGIC:
+            raise StorageFormatError(
+                f"{path}: not a spilled E2LSHoS index (magic {magic!r}, "
+                f"expected {MAGIC!r})")
+        version = int(np.frombuffer(f.read(4), np.uint32)[0])
+        if version != FORMAT_VERSION:
+            raise StorageFormatError(
+                f"{path}: unsupported spill format version {version} "
+                f"(this build reads version {FORMAT_VERSION}; re-spill the "
+                "index with IndexArrays.spill)")
+        hlen = int(np.frombuffer(f.read(4), np.uint32)[0])
+        hcrc = int(np.frombuffer(f.read(4), np.uint32)[0])
+        hdr = f.read(hlen)
+    if len(hdr) != hlen or (zlib.crc32(hdr) & 0xFFFFFFFF) != hcrc:
+        raise StorageFormatError(
+            f"{path}: corrupted header (crc mismatch) — the file is "
+            "truncated or damaged; re-spill the index")
+    meta = json.loads(hdr.decode("utf-8"))
+    return SpillHeader(
+        version=version, page_size=int(meta["page_size"]),
+        block_objs=int(meta["block_objs"]), lane_pad=int(meta["lane_pad"]),
+        blkp=int(meta["blkp"]), nb=int(meta["nb"]),
+        sections=meta["sections"], params=meta.get("params"),
+        stats=meta.get("stats"),
+    )
+
+
+def _read_section(path, hdr: SpillHeader, name: str, *,
+                  verify: bool = True) -> np.ndarray:
+    sec = hdr.sections[name]
+    arr = np.fromfile(path, dtype=np.dtype(sec["dtype"]),
+                      count=int(np.prod(sec["shape"], dtype=np.int64)),
+                      offset=int(sec["offset"]))
+    if arr.nbytes != sec["nbytes"]:
+        raise StorageFormatError(
+            f"{path}: section {name!r} truncated "
+            f"({arr.nbytes} of {sec['nbytes']} bytes)")
+    if verify and (zlib.crc32(arr.tobytes()) & 0xFFFFFFFF) != sec["crc32"]:
+        raise StorageFormatError(
+            f"{path}: section {name!r} failed its crc32 check — the file "
+            "is damaged; re-spill the index")
+    return arr.reshape(sec["shape"])
+
+
+def verify_file(path) -> SpillHeader:
+    """Full integrity pass: header + every section crc (blocks included)."""
+    hdr = read_header(path)
+    for name in hdr.sections:
+        _read_section(path, hdr, name, verify=True)
+    return hdr
+
+
+def load_arrays(path):
+    """Materialize the full in-memory ``IndexArrays`` from a spilled file
+    (every leaf crc-verified) — the bit-for-bit round-trip counterpart of
+    ``IndexArrays.spill``."""
+    import jax.numpy as jnp
+
+    from ..core.index import IndexArrays
+
+    hdr = read_header(path)
+    blocks = _read_section(path, hdr, "blocks")
+    resident = {name: _read_section(path, hdr, name)
+                for name in _RESIDENT_FIELDS}
+    return IndexArrays(
+        ids_blocks=jnp.asarray(blocks[:, 0]),
+        fps_blocks=jnp.asarray(blocks[:, 1]),
+        **{name: jnp.asarray(arr) for name, arr in resident.items()},
+        block_objs=hdr.block_objs, lane_pad=hdr.lane_pad,
+    )
+
+
+def load_external(path, *, backend: str = "aio", qd: int = 16,
+                  cache_rows: Optional[int] = None):
+    """Open a spilled index for external-memory querying.
+
+    Hash tables, family params, the CSR view, and the DRAM tier load
+    resident; the block store stays on disk behind the selected
+    :class:`~repro.storage.blockstore.BlockStore` backend (``mem`` — the
+    in-memory parity oracle; ``mmap`` — synchronous QD1 page-cache reads;
+    ``aio`` — ``qd``-way pread fan-out with a clock page cache of
+    ``cache_rows`` block rows). Returns an
+    :class:`~repro.storage.external.ExternalIndex` that ``SearchEngine``
+    serves under ``plan="external"``.
+    """
+    import jax.numpy as jnp
+
+    from ..core.probabilities import LSHParams
+    from .blockstore import make_store
+    from .external import ExternalIndex
+
+    hdr = read_header(path)
+    if hdr.params is None:
+        raise StorageFormatError(
+            f"{path}: spilled without LSHParams — serve it by spilling via "
+            "E2LSHIndex.spill (or IndexArrays.spill(..., params=...))")
+    pdict = dict(hdr.params)
+    pdict["radii"] = tuple(pdict["radii"])
+    params = LSHParams(**pdict)
+    resident = {name: _read_section(path, hdr, name)
+                for name in _EXTERNAL_FIELDS}
+    store = make_store(backend, path, hdr, qd=qd, cache_rows=cache_rows)
+    stats = None
+    if hdr.stats is not None:
+        from ..core.index import IndexStats
+        stats = IndexStats(**hdr.stats)
+    return ExternalIndex(
+        params=params,
+        a=jnp.asarray(resident["a"]), b=jnp.asarray(resident["b"]),
+        rm=jnp.asarray(resident["rm"]),
+        blocks_head=jnp.asarray(resident["blocks_head"]),
+        table_cnt=jnp.asarray(resident["table_cnt"]),
+        db=jnp.asarray(resident["db"]),
+        db_norm2=jnp.asarray(resident["db_norm2"]),
+        block_objs=hdr.block_objs, lane_pad=hdr.lane_pad, blkp=hdr.blkp,
+        store=store, path=str(path), stats=stats,
+    )

@@ -1,0 +1,155 @@
+"""Measured sync-vs-async harness: run the REAL mmap/aio backends on a
+spilled index and put the numbers next to the Eq. 6/7 model.
+
+This is the measurement half of the paper's Fig. 11/13 story — previously
+the repo could only *model* T_sync/T_async (core.storage); now it runs
+both disciplines on the same index and the same query batch:
+
+* ``mmap`` — synchronous QD1 block reads (Sec. 6.5's slow baseline),
+* ``aio``  — queue-depth-``qd`` fan-out + clock cache + next-rung prefetch,
+
+and reports the measured slowdown, cache hit rate, and measured N_io
+(which must equal the Eq. 6/7 replay — tests/test_io_count.py). Shared by
+``benchmarks/sync_vs_async.py --measured``, the ``external_storage``
+section of ``benchmarks/bench_query_engine.py``, and the dryrun cell.
+
+Model-vs-measured caveat (recorded in the output): the model's device
+constants are the paper's SSDs (Table 2); the harness runs on whatever
+backs the spill path (often the OS page cache), so the RATIO of the two is
+the meaningful comparison, not the absolute microseconds.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+import numpy as np
+
+from ..core.storage import (DEVICES, INTERFACES, StorageConfig, t_async,
+                            t_sync)
+from .format import load_external
+
+__all__ = ["measure_backends", "heavy_bucket_workload",
+           "DEFAULT_MODEL_CONFIG", "HEAVY_SPEC"]
+
+DEFAULT_MODEL_CONFIG = StorageConfig(DEVICES["cssd"], 4,
+                                     INTERFACES["io_uring"])
+
+# The canonical I/O-heavy measurement shape (the paper's storage-bound
+# regime): few heavy clusters -> big buckets, deep S budget -> long chains,
+# so the I/O discipline dominates what can differ between backends. ONE
+# definition shared by benchmarks/sync_vs_async.py --measured and the
+# external_storage section of benchmarks/bench_query_engine.py — tuning it
+# here keeps the two lanes measuring the same regime.
+HEAVY_SPEC = dict(n=12000, d=8, centers=6, max_L=24, s_cap=512,
+                  queries=128, qd=32)
+
+
+def heavy_bucket_workload(spec: dict = None, *, seed: int = 1):
+    """Build the clustered heavy-bucket dataset + index of ``spec``
+    (defaults: HEAVY_SPEC). Returns (E2LSHoS index, queries [Q, d])."""
+    from ..core.e2lshos import E2LSHoS
+
+    spec = dict(HEAVY_SPEC, **(spec or {}))
+    rng = np.random.default_rng(seed)
+    n, d, Q = spec["n"], spec["d"], spec["queries"]
+    centers = rng.normal(size=(spec["centers"], d)).astype(np.float32)
+    db = (centers[rng.integers(0, spec["centers"], n)]
+          + 0.12 * rng.normal(size=(n, d))).astype(np.float32)
+    qs = (db[rng.choice(n, Q, replace=False)]
+          + 0.04 * rng.normal(size=(Q, d))).astype(np.float32)
+    s = float(np.median(np.linalg.norm(db - db.mean(0), axis=1))) / 3
+    idx = E2LSHoS.build(db / s, gamma=0.7, s_scale=2.0,
+                        max_L=spec["max_L"], seed=seed)
+    return idx, qs / s
+
+
+def _time_backend(path, queries, *, backend: str, qd: int, k: int,
+                  s_cap, repeats: int) -> dict:
+    from ..core.query import SearchEngine
+
+    with load_external(path, backend=backend, qd=qd) as ext:
+        engine = SearchEngine(ext)
+        _, fn = engine.make_plan_fn(plan="external", k=k, s_cap=s_cap)
+        res = fn(queries)                          # warm compile caches
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            res = fn(queries)
+            times.append(time.perf_counter() - t0)
+        ps = engine.last_external_stats
+        return dict(
+            backend=backend,
+            t_batch_ms=statistics.median(times) * 1e3,
+            t_query_us=statistics.median(times) / queries.shape[0] * 1e6,
+            measured_nio_blocks=ps.measured_nio_blocks,
+            nio_mean=float(np.mean(np.asarray(res.nio))),
+            cache_hit_rate=ps.cache_hit_rate,
+            device_reads=ps.io.device_reads,
+            prefetch_reads=ps.io.prefetch_reads,
+            fetch_ms=ps.fetch_ms_total,
+            compute_wait_ms=ps.compute_wait_ms_total,
+            result=res,
+        )
+
+
+def measure_backends(index, queries, *, spill_path, k: int = 1,
+                     s_cap=None, qd: int = 16, repeats: int = 5,
+                     model_config: StorageConfig = DEFAULT_MODEL_CONFIG,
+                     t_compute: float = None) -> dict:
+    """Spill ``index`` (an E2LSHoS / E2LSHIndex) to ``spill_path``, run the
+    query batch through the mmap (sync) and aio (async) backends, and
+    return measured + modeled numbers side by side.
+
+    ``t_compute`` (seconds/query) feeds the Eq. 6/7 model; when None it is
+    measured from the in-memory fused plan on the same batch.
+    """
+    from ..core.query import SearchEngine
+
+    idx = index.index if hasattr(index, "index") else index
+    idx.spill(spill_path)
+    queries = np.asarray(queries, dtype=np.float32)
+
+    if t_compute is None:
+        engine = SearchEngine(idx)
+        _, fused = engine.make_plan_fn(plan="fused", k=k, s_cap=s_cap)
+        import jax
+        jax.block_until_ready(fused(queries).ids)
+        times = []
+        for _ in range(max(3, repeats)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fused(queries).ids)
+            times.append(time.perf_counter() - t0)
+        t_compute = statistics.median(times) / queries.shape[0]
+
+    sync = _time_backend(spill_path, queries, backend="mmap", qd=1, k=k,
+                         s_cap=s_cap, repeats=repeats)
+    async_ = _time_backend(spill_path, queries, backend="aio", qd=qd, k=k,
+                           s_cap=s_cap, repeats=repeats)
+    # the two disciplines read the same logical blocks — the ledger the
+    # model consumes is identical by construction
+    assert sync["measured_nio_blocks"] == async_["measured_nio_blocks"], (
+        sync["measured_nio_blocks"], async_["measured_nio_blocks"])
+
+    nio = sync["nio_mean"]
+    model_sync_s = t_sync(t_compute, nio, model_config)
+    model_async_s = t_async(t_compute, nio, model_config)
+    measured_slowdown = sync["t_query_us"] / async_["t_query_us"]
+    for d in (sync, async_):
+        d.pop("result")
+    return dict(
+        queries=int(queries.shape[0]),
+        qd=qd,
+        t_compute_us=t_compute * 1e6,
+        sync=sync,
+        async_=async_,
+        measured_slowdown_sync_vs_async=measured_slowdown,
+        model=dict(
+            config=model_config.name,
+            t_sync_us=model_sync_s * 1e6,
+            t_async_us=model_async_s * 1e6,
+            slowdown_sync_vs_async=model_sync_s / model_async_s,
+        ),
+        model_vs_measured_slowdown_ratio=(
+            (model_sync_s / model_async_s) / measured_slowdown),
+    )

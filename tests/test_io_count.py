@@ -111,6 +111,38 @@ def test_masked_padding_rows_are_io_inert(built_index, clustered_data):
                                   np.asarray(ref.ids))
 
 
+def test_external_plan_measured_nio_matches_replay(built_index,
+                                                   clustered_data, tmp_path):
+    """The Eq. 6/7 tie-out for the REAL storage path: the block reads the
+    external plan's BlockStore actually served (its logical read ledger)
+    must equal (a) the runtime nio counters and (b) the io_count replay of
+    the recorded probe trace — measured N_io == modeled N_io, exactly. This
+    is what lets the measured T_sync/T_async benchmarks be compared against
+    the analytical model at all."""
+    from repro import storage as st
+    from repro.core import SearchEngine
+
+    path = tmp_path / "idx.e2l"
+    built_index.index.spill(path)
+    p = built_index.params
+    q = clustered_data["queries"][:24]
+    with st.load_external(path, backend="aio", qd=8) as ext:
+        engine = SearchEngine(ext)
+        res = engine.query(q, k=1, collect_probe_sizes=True)
+        ps = engine.last_external_stats
+    replay = nio_for_block_size(np.asarray(res.probe_sizes), s_cap=p.S,
+                                block_bytes=p.block_bytes)
+    # per-query: trace replay == runtime counters (same contract as fused)
+    np.testing.assert_array_equal(replay, np.asarray(res.nio))
+    # aggregate: the store's ledger == the counters == the replay's block
+    # share (replay includes table reads; the store serves only blocks)
+    blocks_replayed = int(replay.sum()) - int(np.asarray(res.nio_table).sum())
+    assert ps.measured_nio_blocks == blocks_replayed
+    assert ps.measured_nio_blocks == int(np.asarray(res.nio_blocks).sum())
+    # speculative prefetch must never leak into the logical ledger
+    assert ps.io.reads == ps.measured_nio_blocks
+
+
 def test_block_objs_for():
     assert block_objs_for(512) == 99
     assert block_objs_for(128) == (128 - 16) // 5

@@ -1,0 +1,309 @@
+"""The external-memory storage subsystem (repro.storage): on-disk format
+round-trips, corruption rejection, and the plan="external" parity contract.
+
+Parity contract (docs/storage.md): on a spilled copy of an index,
+``plan="external"`` — any backend — must match ``plan="fused"`` on every
+``QueryResult`` field, and the block reads the store actually served
+(measured N_io) must equal the runtime counters exactly. Under the forced
+interpret kernel lane (`make storage-lane`) float distances are held to the
+kernel lane's allclose contract (interpreter matmul reassociation); on the
+default backend they are bit-exact.
+"""
+import numpy as np
+import pytest
+
+from repro.core import E2LSHoS, SearchEngine
+from repro.core.index import E2LSHIndex, IndexArrays
+from repro.kernels.dispatch import force_pallas_env
+from repro import storage as st
+
+_EXACT_FIELDS = ("ids", "found", "radii_searched", "nio_table", "nio_blocks",
+                 "cands_checked")
+_BACKENDS = ("mem", "mmap", "aio")
+
+
+def _assert_matches(ref, out, *, probe_sizes=False):
+    for name in _EXACT_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, name)), np.asarray(getattr(out, name)),
+            err_msg=f"external plan diverged from fused on {name}")
+    if force_pallas_env():   # interpret-lane float contract (kernel lane)
+        np.testing.assert_allclose(np.asarray(ref.dists),
+                                   np.asarray(out.dists),
+                                   rtol=1e-4, atol=1e-5)
+    else:
+        np.testing.assert_array_equal(np.asarray(ref.dists),
+                                      np.asarray(out.dists))
+    if probe_sizes:
+        np.testing.assert_array_equal(np.asarray(ref.probe_sizes),
+                                      np.asarray(out.probe_sizes))
+
+
+# A dedicated SMALL index (not the big session fixture): this file also
+# runs under the forced interpret kernel path (`make storage-lane`), where
+# every distinct batch shape recompiles the interpret kernels — the lane
+# stays fast only if the index and query set stay small (same sizing as
+# test_force_pallas_lane's lane_index).
+@pytest.fixture(scope="module")
+def storage_index():
+    rng = np.random.default_rng(7)
+    n, d = 1500, 12
+    centers = rng.normal(size=(24, d)).astype(np.float32)
+    db = (centers[rng.integers(0, 24, n)]
+          + 0.18 * rng.normal(size=(n, d))).astype(np.float32)
+    qs = (db[rng.choice(n, 24, replace=False)]
+          + 0.05 * rng.normal(size=(24, d))).astype(np.float32)
+    s = float(np.median(np.linalg.norm(db - db.mean(0), axis=1))) / 3
+    return E2LSHoS.build(db / s, gamma=0.7, s_scale=2.0, max_L=8,
+                         seed=3), qs / s
+
+
+@pytest.fixture(scope="module")
+def spilled(storage_index, tmp_path_factory):
+    idx, _ = storage_index
+    path = tmp_path_factory.mktemp("spill") / "index.e2l"
+    idx.index.spill(path)
+    return path
+
+
+@pytest.fixture(scope="module")
+def hard_queries(storage_index):
+    """Mostly-easy queries plus one far outlier that walks several radii —
+    exercises the multi-rung loop, prefetch, and early exit."""
+    _, qs = storage_index
+    q = qs[:15]
+    far = np.full((1, q.shape[1]), 40.0, dtype=np.float32)
+    return np.concatenate([q, far])
+
+
+# --------------------------------------------------------------------------
+# On-disk format
+# --------------------------------------------------------------------------
+
+def test_spill_load_roundtrip_bit_exact(storage_index, spilled):
+    """Every IndexArrays leaf and the layout metadata survive
+    spill -> load_arrays bit-for-bit (crc-verified on the way in)."""
+    idx, _ = storage_index
+    loaded = st.load_arrays(spilled)
+    for name in IndexArrays.array_fields():
+        np.testing.assert_array_equal(
+            np.asarray(getattr(loaded, name)),
+            np.asarray(getattr(idx.index.arrays, name)),
+            err_msg=f"leaf {name} changed across spill/load")
+    assert loaded.block_objs == idx.index.arrays.block_objs
+    assert loaded.lane_pad == idx.index.arrays.lane_pad
+    hdr = st.verify_file(spilled)      # full-crc pass, blocks included
+    assert hdr.version == st.FORMAT_VERSION
+    assert hdr.params is not None and hdr.stats is not None
+    # sections are page-aligned (the mmap/aio backends rely on it)
+    for sec in hdr.sections.values():
+        assert sec["offset"] % hdr.page_size == 0
+
+
+def test_header_carries_params_for_serving(storage_index, spilled):
+    idx, _ = storage_index
+    hdr = st.read_header(spilled)
+    assert hdr.block_objs == idx.params.block_objs
+    assert tuple(hdr.params["radii"]) == idx.params.radii
+    assert hdr.nb == int(idx.index.arrays.ids_blocks.shape[0])
+
+
+def test_rejects_wrong_magic(tmp_path):
+    bad = tmp_path / "not_an_index.bin"
+    bad.write_bytes(b"NOTANIDX" + b"\x00" * 64)
+    with pytest.raises(st.StorageFormatError, match="magic"):
+        st.read_header(bad)
+
+
+def test_rejects_future_version(spilled, tmp_path):
+    data = bytearray(spilled.read_bytes())
+    data[8] = 0xFE                       # bump the version field
+    bad = tmp_path / "future.e2l"
+    bad.write_bytes(bytes(data))
+    with pytest.raises(st.StorageFormatError, match="version"):
+        st.read_header(bad)
+
+
+def test_rejects_corrupted_header(spilled, tmp_path):
+    data = bytearray(spilled.read_bytes())
+    data[40] ^= 0xFF                     # flip a byte inside the header JSON
+    bad = tmp_path / "corrupt.e2l"
+    bad.write_bytes(bytes(data))
+    with pytest.raises(st.StorageFormatError, match="corrupted header"):
+        st.read_header(bad)
+
+
+def test_rejects_corrupted_section(spilled, tmp_path):
+    hdr = st.read_header(spilled)
+    data = bytearray(spilled.read_bytes())
+    data[hdr.sections["db"]["offset"]] ^= 0xFF
+    bad = tmp_path / "corrupt_section.e2l"
+    bad.write_bytes(bytes(data))
+    with pytest.raises(st.StorageFormatError, match="crc32"):
+        st.load_arrays(bad)
+
+
+def test_spill_without_params_is_not_servable(storage_index, tmp_path):
+    path = tmp_path / "bare.e2l"
+    storage_index[0].index.arrays.spill(path)      # no params attached
+    st.load_arrays(path)                           # round-trip still fine
+    with pytest.raises(st.StorageFormatError, match="LSHParams"):
+        st.load_external(path)
+
+
+# --------------------------------------------------------------------------
+# plan="external" parity
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", _BACKENDS)
+def test_external_plan_matches_fused(storage_index, spilled, hard_queries,
+                                     backend):
+    """The acceptance contract: external == fused on every field, any
+    backend, measured N_io == runtime counters."""
+    ref = SearchEngine(storage_index[0]).query(hard_queries, plan="fused",
+                                               k=3, collect_probe_sizes=True)
+    with st.load_external(spilled, backend=backend, qd=8) as ext:
+        engine = SearchEngine(ext)
+        assert engine.plans == ("external",)
+        assert engine.default_plan == "external"
+        out = engine.query(hard_queries, k=3, collect_probe_sizes=True)
+        _assert_matches(ref, out, probe_sizes=True)
+        ps = engine.last_external_stats
+        assert ps.backend == backend
+        assert ps.measured_nio_blocks == ps.nio_blocks_counted
+        assert ps.measured_nio_blocks == int(np.asarray(out.nio_blocks).sum())
+        assert len(ps.rungs) >= 1
+        # the per-rung overlap records partition the total block fetches
+        assert sum(r.blocks_fetched for r in ps.rungs) == ps.nio_blocks_counted
+
+
+@pytest.mark.parametrize("backend", ("mem", "aio"))
+def test_external_plan_s_cap_knob(storage_index, spilled, hard_queries,
+                                  backend):
+    ref = SearchEngine(storage_index[0]).query(hard_queries, plan="fused",
+                                               k=1, s_cap=8)
+    with st.load_external(spilled, backend=backend, qd=4) as ext:
+        out = SearchEngine(ext).query(hard_queries, k=1, s_cap=8)
+        _assert_matches(ref, out)
+
+
+def test_external_single_query_padding(storage_index, spilled, hard_queries):
+    """Q=1 routes through the same masked Q=2 gemm path as every plan."""
+    ref = SearchEngine(storage_index[0]).query(hard_queries[:1],
+                                               plan="fused", k=2)
+    with st.load_external(spilled, backend="mem") as ext:
+        out = SearchEngine(ext).query(hard_queries[:1], k=2)
+        _assert_matches(ref, out)
+
+
+def test_external_masked_rows_inert(storage_index, spilled):
+    """The serving mask contract holds from storage: masked rows fetch no
+    blocks, count zero I/O, and leave the real rows bit-identical."""
+    idx, qs = storage_index
+    q = qs[:9]
+    pad = np.concatenate([q, np.full((7, q.shape[1]), 1e6, np.float32)])
+    valid = np.arange(16) < 9
+    ref = SearchEngine(idx).query(q, plan="fused", k=2)
+    with st.load_external(spilled, backend="aio", qd=4) as ext:
+        engine = SearchEngine(ext)
+        out = engine.query(pad, k=2, valid=valid)
+        _assert_matches(ref, out.slice_rows(0, 9))
+        tail = out.slice_rows(9, 16)
+        assert (np.asarray(tail.ids) == np.int32(2**31 - 1)).all()
+        assert not np.asarray(tail.found).any()
+        assert (np.asarray(tail.nio) == 0).all()
+
+
+def test_external_rejects_foreign_plans_and_knobs(spilled):
+    with st.load_external(spilled, backend="mem") as ext:
+        engine = SearchEngine(ext)
+        with pytest.raises(ValueError, match="unknown plan"):
+            engine.query(np.zeros((2, ext.db.shape[1]), np.float32),
+                         plan="fused")
+        with pytest.raises(ValueError, match="re-spill"):
+            engine.query(np.zeros((2, ext.db.shape[1]), np.float32),
+                         block_objs=16)
+        with pytest.raises(ValueError, match="on disk"):
+            engine.arrays()
+
+
+def test_unknown_backend_rejected(spilled):
+    with pytest.raises(ValueError, match="unknown block-store backend"):
+        st.load_external(spilled, backend="warp")
+
+
+# --------------------------------------------------------------------------
+# The aio page cache
+# --------------------------------------------------------------------------
+
+def test_aio_cache_hits_on_repeat_queries(storage_index, spilled):
+    """Re-running the same batch serves the second pass mostly from the
+    clock cache; the logical read ledger (measured N_io) is unchanged."""
+    q = storage_index[1][:16]
+    with st.load_external(spilled, backend="aio", qd=8) as ext:
+        engine = SearchEngine(ext)
+        first = engine.query(q, k=1)
+        nio1 = engine.last_external_stats.measured_nio_blocks
+        hits1 = engine.last_external_stats.io.cache_hits
+        second = engine.query(q, k=1)
+        ps2 = engine.last_external_stats
+        assert ps2.measured_nio_blocks == nio1   # logical N_io is identical
+        assert ps2.io.cache_hits > hits1         # but served from the cache
+        assert ps2.cache_hit_rate > 0.9
+        np.testing.assert_array_equal(np.asarray(first.ids),
+                                      np.asarray(second.ids))
+
+
+def test_aio_tiny_cache_still_correct(storage_index, spilled, hard_queries):
+    """A cache too small to hold the working set must only cost device
+    reads, never correctness."""
+    ref = SearchEngine(storage_index[0]).query(hard_queries, plan="fused",
+                                               k=1)
+    with st.load_external(spilled, backend="aio", qd=2, cache_rows=4) as ext:
+        out = SearchEngine(ext).query(hard_queries, k=1)
+        _assert_matches(ref, out)
+
+
+def test_store_counters_ledger(spilled):
+    """reads = device_reads + cache_hits, always (the measured-N_io ledger
+    the Eq. 6/7 validation is built on)."""
+    with st.load_external(spilled, backend="aio", qd=4) as ext:
+        engine = SearchEngine(ext)
+        q = np.asarray(ext.db[:8]) * 1.01
+        engine.query(q, k=1)
+        engine.query(np.asarray(ext.db[4:12]) * 1.01, k=1)
+        s = ext.store.stats
+        assert s.reads == s.device_reads + s.cache_hits
+        assert s.read_batches >= 2
+
+
+# --------------------------------------------------------------------------
+# Serving: BatchQueue over plan="external"
+# --------------------------------------------------------------------------
+
+def test_batch_queue_over_external_plan(storage_index, spilled):
+    """Queued ragged requests through the external plan are bit-exact with
+    direct external dispatch per request — the queue's parity contract
+    holds when the block rows come from disk."""
+    from repro.serving import BatchQueue
+
+    q = storage_index[1]
+    with st.load_external(spilled, backend="aio", qd=8) as ext:
+        engine = SearchEngine(ext)
+        queue = BatchQueue(engine, k=2, ladder=(4, 8), tick_us=50.0)
+        assert queue.plan == "external"
+        _, direct = engine.make_plan_fn(plan="external", k=2)
+        reqs = [q[:1], q[1:6], q[6:17], q[3:7]]   # incl. a >max_batch spill
+        tickets = [queue.submit(r) for r in reqs]
+        queue.drain()
+        for t, r in zip(tickets, reqs):
+            got, want = t.result(0), direct(r)
+            for name in _EXACT_FIELDS + ("dists",):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(got, name)),
+                    np.asarray(getattr(want, name)),
+                    err_msg=f"queued external {name} diverged")
+        s = queue.stats_summary()
+        assert s["dispatches"] == s["ticks"]
+        assert "external_store" in s
+        assert s["external_store"]["reads"] > 0
