@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: verify test bench-query bench-smoke deprecation-lane kernel-lane \
-	storage-lane deps
+	storage-lane uring-lane deps
 
 deps:
 	$(PY) -m pip install -r requirements.txt
@@ -58,3 +58,21 @@ storage-lane:
 	REPRO_FORCE_PALLAS=interpret $(PY) -m pytest \
 	tests/test_storage_external.py \
 	tests/test_io_count.py::test_external_plan_measured_nio_matches_replay -q
+
+# async-engine lane: force EVERY make_store call onto the uring backend
+# (REPRO_STORE_BACKEND — the storage twin of REPRO_FORCE_PALLAS) and run
+# the full parity suite + the N_io tie-out through it. The capability
+# probe gates the lane: where io_uring can't run (old kernel, seccomp)
+# the lane prints the probe's reason and skips instead of testing the
+# fallback twice.
+uring-lane:
+	@$(PY) -c "from repro.storage import capabilities; import json, sys; \
+	caps = capabilities(); print('capabilities:', json.dumps(caps)); \
+	sys.exit(0 if caps['uring_store'] else 3)"; rc=$$?; \
+	if [ $$rc -eq 0 ]; then \
+		REPRO_STORE_BACKEND=uring $(PY) -m pytest \
+		tests/test_storage_external.py \
+		tests/test_io_count.py::test_external_plan_measured_nio_matches_replay -q; \
+	elif [ $$rc -eq 3 ]; then \
+		echo "uring-lane SKIPPED: io_uring unavailable here (reason above)"; \
+	else exit $$rc; fi

@@ -6,14 +6,23 @@ the model reproduces the order of magnitude.
 
 ``--measured`` additionally runs the REAL storage subsystem: it builds a
 small index, spills it (repro.storage), and serves the same query batch
-through the mmap (sync QD1) and aio (async fan-out + cache + prefetch)
-BlockStore backends, printing the measured slowdown next to the model's.
-The spill is served from the OS page cache here, so the measured gap is
-request-handling + queue-depth overhead rather than SSD latency — smaller
-than the paper's 19.7x, but the sign must agree: sync MUST be slower than
-async (asserted).
+through the mmap (sync QD1) and the async BlockStore backend (``uring``
+where the kernel supports it, else the ``aio`` emulation), printing the
+measured slowdown next to the model's. Timings are best-of-``--repeats``
+after a warmup pass — single-run comparisons on a hot box wobble enough to
+flip the sign. ``--cache-mode cold`` engages the cache-defeating
+methodology (store re-open + fadvise drop per repeat, O_DIRECT demand
+reads under uring; docs/storage.md) so measured latency is device latency;
+the default ``warm`` measures request-handling + queue-depth overhead on a
+page-cached spill — smaller than the paper's 19.7x, but the sign must
+agree: sync MUST be slower than async (asserted).
 
-    PYTHONPATH=src python -m benchmarks.sync_vs_async [--measured]
+``--sweep`` runs the measured QD sweep instead of the single point: the
+fixed mmap QD1 baseline against the async backend at each ``--qds`` depth
+(cold by default — the QD axis should mean device queue depth), with the
+Eq. 6/7 model evaluated at each depth for comparison.
+
+    PYTHONPATH=src python -m benchmarks.sync_vs_async [--measured] [--sweep]
 """
 from __future__ import annotations
 
@@ -42,11 +51,14 @@ def run(benches=None):
     return rows
 
 
-def run_measured(*, qd: int = None, seed: int = 1, repeats: int = 5):
-    """Run the real mmap vs aio backends on a generated index — the SAME
+def run_measured(*, qd: int = None, seed: int = 1, repeats: int = 5,
+                 cache_mode: str = "warm"):
+    """Run the real mmap vs async backends on a generated index — the SAME
     storage-bound workload (repro.storage.HEAVY_SPEC) the BENCH_query.json
     external_storage section measures — and print measured vs modeled
-    slowdown. Asserts measured sync > async."""
+    slowdown. Timings are best-of-``repeats`` (min after warmup; median and
+    max also reported) so the sync>async assertion doesn't ride on one
+    noisy run. Asserts measured sync > async."""
     import pathlib
     import tempfile
 
@@ -62,45 +74,97 @@ def run_measured(*, qd: int = None, seed: int = 1, repeats: int = 5):
         m = measure_backends(idx, qs,
                              spill_path=pathlib.Path(tmp) / "index.e2l",
                              k=1, s_cap=spec["s_cap"], qd=qd,
-                             repeats=repeats)
+                             repeats=repeats, cache_mode=cache_mode)
     fetch_ratio = (m["sync"]["fetch_ms"] / m["async_"]["fetch_ms"]
                    if m["async_"]["fetch_ms"] > 0 else float("inf"))
+    a, s = m["async_"], m["sync"]
     rows = [
         ("sync_vs_async.measured_async",
-         f"{m['async_']['t_query_us']:.1f}",
-         f"aio_qd{qd};nio={m['async_']['nio_mean']:.0f};"
-         f"hit={m['async_']['cache_hit_rate']:.2f}"),
+         f"{a['t_query_us']:.1f}",
+         f"{a['backend']}_qd{qd};direct={int(a['o_direct'])};"
+         f"median={a['t_query_us_median']:.1f};nio={a['nio_mean']:.0f};"
+         f"hit={a['cache_hit_rate']:.2f}"),
         ("sync_vs_async.measured_sync_qd1",
-         f"{m['sync']['t_query_us']:.1f}",
-         f"mmap;slowdown={m['measured_slowdown_sync_vs_async']:.2f};"
-         f"fetch_lane_slowdown={fetch_ratio:.2f}"),
+         f"{s['t_query_us']:.1f}",
+         f"mmap;median={s['t_query_us_median']:.1f};"
+         f"slowdown={m['measured_slowdown_sync_vs_async']:.2f};"
+         f"fetch_lane_slowdown={fetch_ratio:.2f};"
+         f"cache_mode={cache_mode}"),
         ("sync_vs_async.model_at_measured_nio",
          f"{m['model']['t_sync_us']:.1f}",
          f"model_slowdown={m['model']['slowdown_sync_vs_async']:.2f};"
-         "paper_reports=19.7;page_cache_caveat=see_docs_storage_md"),
+         "paper_reports=19.7;device_caveat=see_docs_storage_md"),
     ]
     emit(rows)
     # the sign of the paper's headline result must reproduce on real I/O
     assert m["measured_slowdown_sync_vs_async"] > 1.0, (
-        "measured sync (mmap) was not slower than async (aio): "
+        f"measured sync (mmap) was not slower than async ({a['backend']}) "
+        f"even best-of-{repeats}: "
         f"{m['measured_slowdown_sync_vs_async']:.3f}x")
+    return rows
+
+
+def run_sweep(*, qds=None, seed: int = 1, repeats: int = 3,
+              cache_mode: str = "cold"):
+    """The measured QD sweep (paper Fig. 11's axis, from data): async
+    latency/IOPS at each queue depth vs the fixed sync QD1 baseline, with
+    the Eq. 6/7 model at the same N_io and depth."""
+    import pathlib
+    import tempfile
+
+    from repro.storage import (HEAVY_SPEC, SWEEP_QDS, heavy_bucket_workload,
+                               qd_sweep)
+
+    idx, qs = heavy_bucket_workload(seed=seed)
+    with tempfile.TemporaryDirectory(prefix="sva_sweep_") as tmp:
+        sw = qd_sweep(idx, qs, spill_path=pathlib.Path(tmp) / "index.e2l",
+                      qds=tuple(qds or SWEEP_QDS), k=1,
+                      s_cap=HEAVY_SPEC["s_cap"], repeats=repeats,
+                      cache_mode=cache_mode)
+    c = sw["curves"][0]
+    rows = [("sync_vs_async.sweep_sync_qd1",
+             f"{c['sync']['t_query_us']:.1f}",
+             f"mmap;iops={c['iops_sync']:.0f};"
+             f"nio_per_q={c['nio_per_query']:.1f};"
+             f"block_bytes={c['block_bytes']};cache_mode={cache_mode}")]
+    for p in c["points"]:
+        rows.append((
+            f"sync_vs_async.sweep_qd{p['qd']}",
+            f"{p['t_query_us']:.1f}",
+            f"{p['backend']};iops={p['iops_measured']:.0f};"
+            f"slowdown={p['slowdown_sync_vs_async']:.2f};"
+            f"model_slowdown={p['model_slowdown_sync_vs_async']:.2f}"))
+    emit(rows)
     return rows
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--measured", action="store_true",
-                    help="also run the real mmap vs aio BlockStore backends "
-                         "on a generated, spilled index")
+                    help="also run the real mmap vs async BlockStore "
+                         "backends on a generated, spilled index")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run the measured QD sweep (implies a spilled "
+                         "index; cold cache by default)")
     ap.add_argument("--qd", type=int, default=None,
-                    help="aio queue depth (default: HEAVY_SPEC's)")
+                    help="async queue depth (default: HEAVY_SPEC's)")
+    ap.add_argument("--qds", type=int, nargs="+", default=None,
+                    help="queue depths for --sweep (default: SWEEP_QDS)")
+    ap.add_argument("--cache-mode", choices=("warm", "cold"), default=None,
+                    help="measurement cache discipline (default: warm for "
+                         "--measured, cold for --sweep)")
     ap.add_argument("--repeats", type=int, default=5)
     ap.add_argument("--seed", type=int, default=1)
     args = ap.parse_args(argv)
     rows = run()
     if args.measured:
         rows += run_measured(qd=args.qd, seed=args.seed,
-                             repeats=args.repeats)
+                             repeats=args.repeats,
+                             cache_mode=args.cache_mode or "warm")
+    if args.sweep:
+        rows += run_sweep(qds=args.qds, seed=args.seed,
+                          repeats=min(args.repeats, 3),
+                          cache_mode=args.cache_mode or "cold")
     return rows
 
 

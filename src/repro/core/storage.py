@@ -24,7 +24,8 @@ import math
 __all__ = [
     "StorageDevice", "StorageInterface", "StorageConfig",
     "DEVICES", "INTERFACES", "TABLE5_CONFIGS",
-    "t_sync", "t_async", "required_iops_sync", "required_iops_async",
+    "t_sync", "t_async", "t_async_at_qd", "model_qd_sweep",
+    "required_iops_sync", "required_iops_async",
     "required_request_rate_async", "inmem_request_rate_requirement",
 ]
 
@@ -40,6 +41,14 @@ class StorageDevice:
 
     def t_read(self, *, async_io: bool) -> float:
         return 1.0 / (self.iops_qd128 if async_io else self.iops_qd1)
+
+    def iops_at_qd(self, qd: int) -> float:
+        """Random-read IOPS at queue depth ``qd``, interpolated between the
+        paper's two measured anchor points (Table 2): a device with QD1
+        latency ``1/iops_qd1`` sustains ~``qd`` overlapped reads until it
+        saturates at its QD128 rate — the standard Little's-law shape of
+        the paper's Fig. 4-8 requirement curves."""
+        return min(self.iops_qd128, max(1, int(qd)) * self.iops_qd1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +122,34 @@ def t_async(t_compute: float, n_io: float, cfg: StorageConfig) -> float:
     cpu_lane = t_compute + n_io * cfg.interface.t_request
     storage_lane = n_io / cfg.total_iops
     return max(cpu_lane, storage_lane)
+
+
+def t_async_at_qd(t_compute: float, n_io: float, cfg: StorageConfig,
+                  qd: int) -> float:
+    """Eq. 7 evaluated at a finite queue depth: the storage lane runs at
+    the device's QD-``qd`` rate instead of its saturated QD128 rate. At
+    ``qd=1`` this degenerates to (roughly) the synchronous discipline's
+    storage behavior; at the saturation depth it equals :func:`t_async` —
+    the model-side hook the measured QD sweep compares against."""
+    cpu_lane = t_compute + n_io * cfg.interface.t_request
+    storage_lane = n_io / (cfg.device.iops_at_qd(qd) * cfg.count)
+    return max(cpu_lane, storage_lane)
+
+
+def model_qd_sweep(t_compute: float, n_io: float, cfg: StorageConfig,
+                   qds) -> list:
+    """The model's side of the measured QD sweep: per queue depth, the
+    Eq. 6/7 prediction at the SAME N_io — T_async at that depth, the fixed
+    T_sync baseline, and their ratio (the paper's headline sync-vs-async
+    number as a function of queue depth)."""
+    ts = t_sync(t_compute, n_io, cfg)
+    out = []
+    for qd in qds:
+        ta = t_async_at_qd(t_compute, n_io, cfg, qd)
+        out.append(dict(qd=int(qd), t_async_us=ta * 1e6, t_sync_us=ts * 1e6,
+                        slowdown_sync_vs_async=ts / ta,
+                        device_iops=cfg.device.iops_at_qd(qd) * cfg.count))
+    return out
 
 
 def required_iops_sync(t_target: float, t_compute: float, n_io: float) -> float:

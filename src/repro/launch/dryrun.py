@@ -401,6 +401,12 @@ def run_external_store_cell(*, store: str = "aio", qd: int = 16,
                                 seconds=round(time.time() - ts, 2))
             with load_external(spill, backend=store, qd=qd) as ext:
                 engine = SearchEngine(ext)
+                rec["backend_resolved"] = ext.store.name
+                if ext.store.name == "uring":
+                    rec["o_direct"] = bool(ext.store.o_direct)
+                fb = getattr(ext.store, "fallback_reason", None)
+                if fb:
+                    rec["fallback_reason"] = fb
                 ts = time.time()
                 res = engine.query(qs / s, k=k)   # compiles setup + fold
                 rec["compile_seconds"] = round(time.time() - ts, 2)
@@ -539,10 +545,12 @@ def main():
                          "index and drive plan=\"external\" through --store, "
                          "recording compile bill, measured N_io, hit rate, "
                          "and per-rung fetch/compute overlap")
-    ap.add_argument("--store", choices=("mem", "mmap", "aio"), default="aio",
-                    help="BlockStore backend for --external")
+    ap.add_argument("--store", choices=("mem", "mmap", "aio", "uring"),
+                    default="aio",
+                    help="BlockStore backend for --external (uring falls "
+                         "back to aio where io_uring is unavailable)")
     ap.add_argument("--qd", type=int, default=16,
-                    help="aio queue depth for --external")
+                    help="async queue depth for --external")
     ap.add_argument("--ladder", default="8,32,128",
                     help="batch-shape ladder for --queue, comma-separated")
     ap.add_argument("--tick-us", dest="tick_us", type=float, default=200.0,

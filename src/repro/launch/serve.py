@@ -84,7 +84,7 @@ def serve_ann_queued(args, engine: SearchEngine, queries: np.ndarray,
 
 
 def serve_ann_external(args, ds):
-    """--store mmap|aio: build, spill, and serve the index FROM STORAGE
+    """--store mmap|aio|uring: build, spill, and serve the index FROM STORAGE
     through plan="external" (block rows on disk behind the selected
     BlockStore backend; hash tables + coordinates resident)."""
     import pathlib
@@ -107,8 +107,17 @@ def serve_ann_external(args, ds):
         print(f"[external] spilled {spill.stat().st_size/1e6:.1f} MB -> "
               f"{spill} (backend={args.store}, qd={args.qd})")
         ext = stack.enter_context(
-            load_external(spill, backend=args.store, qd=args.qd))
+            load_external(spill, backend=args.store, qd=args.qd,
+                          direct=getattr(args, "direct", True)))
         engine = SearchEngine(ext)
+        if ext.store.name != args.store:
+            print(f"[external] NOTE: requested backend {args.store!r} fell "
+                  f"back to {ext.store.name!r} "
+                  f"({getattr(ext.store, 'fallback_reason', '?')})")
+        elif args.store == "uring":
+            mode = "O_DIRECT" if ext.store.o_direct else "buffered"
+            print(f"[external] uring engine up: qd={ext.store.qd}, {mode} "
+                  f"(align={ext.store.align})")
         if args.queue:
             serve_ann_queued(args, engine, ds.queries, ds.gt_dists,
                              plan="external")
@@ -236,15 +245,24 @@ def main(argv=None):
                     help="max rows per tick (larger requests spill)")
     ap.add_argument("--ladder", default="8,32,128",
                     help="compiled batch-shape ladder, comma-separated")
-    ap.add_argument("--store", choices=("ram", "mmap", "aio"), default="ram",
+    ap.add_argument("--store", choices=("ram", "mmap", "aio", "uring"),
+                    default="ram",
                     help="where bucket blocks live: ram (in-memory plans), "
                          "or an on-disk spill served by plan=\"external\" "
-                         "through the mmap (sync QD1) or aio (async fan-out "
-                         "+ cache + prefetch) BlockStore backend")
+                         "through the mmap (sync QD1), aio (thread-pool "
+                         "fan-out + cache + prefetch), or uring (io_uring "
+                         "batch submission + O_DIRECT where supported; "
+                         "falls back to aio with a warning) BlockStore "
+                         "backend")
     ap.add_argument("--qd", type=int, default=16,
-                    help="aio backend queue depth (pread fan-out width)")
+                    help="async backend queue depth (pread fan-out width "
+                         "for aio; reads in flight at the device for uring)")
+    ap.add_argument("--no-direct", dest="direct", action="store_false",
+                    help="keep the uring backend on buffered (page-cache) "
+                         "reads instead of O_DIRECT")
     ap.add_argument("--spill", default=None,
-                    help="spill path for --store mmap|aio (default: tmpdir)")
+                    help="spill path for --store mmap|aio|uring "
+                         "(default: tmpdir)")
     ap.add_argument("--gamma", type=float, default=0.8)
     ap.add_argument("--max-L", dest="max_L", type=int, default=32)
     ap.add_argument("--arch", default="mamba2-1.3b")

@@ -5,30 +5,45 @@ tables); this package holds the EXECUTABLE storage tier it predicts:
 
 * ``format``     — the versioned, page-aligned on-disk spill format
   (``IndexArrays.spill`` / ``load_external``);
-* ``blockstore`` — pluggable block-read backends (``mem``/``mmap``/``aio``)
-  with the measured-N_io ledger and the aio clock page cache;
+* ``blockstore`` — pluggable block-read backends
+  (``mem``/``mmap``/``aio``/``uring``) with the measured-N_io ledger and
+  the shared clock page cache (``REPRO_STORE_BACKEND`` forces a lane);
+* ``uring``      — the real async I/O engine: io_uring wave submission +
+  O_DIRECT aligned reads via ctypes, with the runtime
+  ``capabilities()`` probe that gates it;
 * ``external``   — ``plan="external"``: device hash/plan + host block
   fetches + device distance epilogue, with per-rung overlap stats;
-* ``measure``    — the measured sync-vs-async harness shared by
-  ``benchmarks/sync_vs_async.py --measured`` and the BENCH external lane.
+* ``measure``    — the measured sync-vs-async harness (cold-cache
+  methodology + the QD/block-size sweep) shared by
+  ``benchmarks/sync_vs_async.py --measured`` and the BENCH lanes.
 """
-from .blockstore import (AioBlockStore, BACKENDS, BlockStore, MemBlockStore,
-                         MmapBlockStore, StoreStats, make_store)
+from .blockstore import (AioBlockStore, BACKENDS, BlockStore,
+                         CachedBlockStore, MemBlockStore, MmapBlockStore,
+                         STORE_BACKEND_ENV, StoreStats, make_store,
+                         store_backend_env)
 from .external import (ExternalIndex, ExternalPlanStats, RungStats,
                        external_plan)
-from .format import (FORMAT_VERSION, MAGIC, PAGE_SIZE, SpillHeader,
-                     StorageFormatError, load_arrays, load_external,
-                     read_header, spill_index, verify_file)
-from .measure import (DEFAULT_MODEL_CONFIG, HEAVY_SPEC,
-                      heavy_bucket_workload, measure_backends)
+from .format import (DIRECT_ALIGN_MIN, FORMAT_VERSION, MAGIC, PAGE_SIZE,
+                     SpillHeader, StorageFormatError, aligned_extent,
+                     load_arrays, load_external, read_header, spill_index,
+                     verify_file)
+from .measure import (DEFAULT_MODEL_CONFIG, HEAVY_SPEC, SWEEP_QDS,
+                      drop_page_cache, heavy_bucket_workload,
+                      measure_backends, page_cache_residency, qd_sweep)
+from .uring import (IoUring, UringBlockStore, UringUnavailable,
+                    capabilities, probe_io_uring, probe_o_direct)
 
 __all__ = [
-    "AioBlockStore", "BACKENDS", "BlockStore", "MemBlockStore",
-    "MmapBlockStore", "StoreStats", "make_store",
+    "AioBlockStore", "BACKENDS", "BlockStore", "CachedBlockStore",
+    "MemBlockStore", "MmapBlockStore", "STORE_BACKEND_ENV", "StoreStats",
+    "make_store", "store_backend_env",
     "ExternalIndex", "ExternalPlanStats", "RungStats", "external_plan",
-    "FORMAT_VERSION", "MAGIC", "PAGE_SIZE", "SpillHeader",
-    "StorageFormatError", "load_arrays", "load_external", "read_header",
-    "spill_index", "verify_file",
-    "DEFAULT_MODEL_CONFIG", "HEAVY_SPEC", "heavy_bucket_workload",
-    "measure_backends",
+    "DIRECT_ALIGN_MIN", "FORMAT_VERSION", "MAGIC", "PAGE_SIZE",
+    "SpillHeader", "StorageFormatError", "aligned_extent", "load_arrays",
+    "load_external", "read_header", "spill_index", "verify_file",
+    "DEFAULT_MODEL_CONFIG", "HEAVY_SPEC", "SWEEP_QDS", "drop_page_cache",
+    "heavy_bucket_workload", "measure_backends", "page_cache_residency",
+    "qd_sweep",
+    "IoUring", "UringBlockStore", "UringUnavailable", "capabilities",
+    "probe_io_uring", "probe_o_direct",
 ]

@@ -2,31 +2,49 @@
 
 The external query plan asks one question per chain rung: "give me these
 block rows" (each row = one paper block: ids + fingerprints of up to
-``block_objs`` object infos). The three backends answer it with the three
-I/O disciplines the paper compares:
+``block_objs`` object infos). The backends answer it with the I/O
+disciplines the paper compares:
 
 * ``mem``  — the block store lives in RAM (current in-memory behavior; the
   parity oracle for the external plan).
 * ``mmap`` — memory-mapped file, one synchronous read per block in request
   order: queue depth 1, every read blocks before the next is issued. This
   is the paper's Sec. 6.5 slow baseline — T_sync of Eq. 6.
-* ``aio``  — asynchronous fan-out: a batch of block reads is deduplicated
-  against a clock page cache and the misses are spread across a ``qd``-wide
-  pread pool, emulating io_uring at high queue depth (paper Table 3 /
-  Fig. 11's QD128 lane — T_async of Eq. 7). Supports ``prefetch`` so the
-  plan can overlap the next rung's reads with the distance epilogue.
+* ``aio``  — asynchronous *emulation*: a batch of block reads is
+  deduplicated against a clock page cache and the misses are spread across
+  a ``qd``-wide pread thread pool (paper Table 3 / Fig. 11's QD128 lane —
+  T_async of Eq. 7 — approximated with one syscall per read through the
+  page cache). Portable everywhere.
+* ``uring`` — the real thing (:mod:`repro.storage.uring`): misses are
+  submitted to the kernel through io_uring in waves of ``qd`` — one
+  syscall per wave, ``qd`` reads in flight at the device — with O_DIRECT
+  file access where the filesystem allows it, so demand reads bypass the
+  page cache and measured latency is device latency. Gated by
+  :func:`repro.storage.uring.capabilities`; ``make_store`` falls back to
+  ``aio`` when the kernel or filesystem can't do it.
 
-Every backend counts the same ledger (:class:`StoreStats`): ``reads`` is
-the *logical* block-read count — the measured N_io the Eq. 6/7 validation
-compares against ``io_count.replay_probe_trace`` — while ``device_reads``/
-``cache_hits``/``prefetch_reads`` describe where those reads were served.
-Duplicate rows inside one batch coalesce in the cache (counted as hits):
-that is precisely the page-cache effect the paper's mmap discussion
-describes, and it never changes the logical count.
+``aio`` and ``uring`` share one cache/accounting engine
+(:class:`CachedBlockStore`) and differ ONLY in how a miss batch reaches
+the device — which is exactly the variable the paper's sync-vs-async
+comparison isolates. Every backend counts the same ledger
+(:class:`StoreStats`): ``reads`` is the *logical* block-read count — the
+measured N_io the Eq. 6/7 validation compares against
+``io_count.replay_probe_trace`` — while ``device_reads``/``cache_hits``/
+``prefetch_reads`` describe where those reads were served. Duplicate rows
+inside one batch coalesce in the cache (counted as hits): that is
+precisely the page-cache effect the paper's mmap discussion describes,
+and it never changes the logical count.
+
+Env override: ``REPRO_STORE_BACKEND=mem|mmap|aio|uring`` forces every
+``make_store`` call onto one backend regardless of what the caller asked
+for — the same lane idiom as ``REPRO_FORCE_PALLAS`` (kernels.dispatch), so
+any test or CLI entry point can be pinned to a backend without threading a
+flag through it (``make uring-lane`` uses this).
 """
 from __future__ import annotations
 
 import dataclasses
+import mmap
 import os
 import threading
 from concurrent.futures import ThreadPoolExecutor
@@ -35,9 +53,26 @@ from typing import Optional
 import numpy as np
 
 __all__ = ["StoreStats", "BlockStore", "MemBlockStore", "MmapBlockStore",
-           "AioBlockStore", "make_store", "BACKENDS"]
+           "CachedBlockStore", "AioBlockStore", "make_store", "BACKENDS",
+           "STORE_BACKEND_ENV", "store_backend_env"]
 
-BACKENDS = ("mem", "mmap", "aio")
+BACKENDS = ("mem", "mmap", "aio", "uring")
+
+STORE_BACKEND_ENV = "REPRO_STORE_BACKEND"
+
+
+def store_backend_env() -> Optional[str]:
+    """The forced backend from ``REPRO_STORE_BACKEND``, or None. Unknown
+    values raise here (a typo'd lane must fail loudly, not silently run the
+    default backend)."""
+    forced = os.environ.get(STORE_BACKEND_ENV, "").strip().lower()
+    if not forced:
+        return None
+    if forced not in BACKENDS:
+        raise ValueError(
+            f"{STORE_BACKEND_ENV}={forced!r} is not a block-store backend; "
+            f"expected one of {BACKENDS}")
+    return forced
 
 
 @dataclasses.dataclass
@@ -134,6 +169,13 @@ class MmapBlockStore(BlockStore):
         self.nb, self.blkp = int(nb), int(blkp)
         self._mm = np.memmap(path, dtype=np.int32, mode="r",
                              offset=int(offset), shape=(self.nb, 2, self.blkp))
+        # chain reads are random: tell the kernel so readahead doesn't
+        # prefetch neighbors and quietly turn the QD1 baseline into a
+        # sequential scan on a cold cache (no-op for already-cached pages)
+        try:
+            self._mm._mmap.madvise(mmap.MADV_RANDOM)
+        except (AttributeError, OSError, ValueError):
+            pass
 
     def read_rows(self, rows):
         rows = np.asarray(rows, dtype=np.int64).ravel()
@@ -149,35 +191,34 @@ class MmapBlockStore(BlockStore):
         self._mm = None
 
 
-class AioBlockStore(BlockStore):
-    """Asynchronous pread fan-out with a clock page cache (the paper's
-    io_uring-at-QD128 discipline, Eq. 7).
+class CachedBlockStore(BlockStore):
+    """The shared async-backend engine: clock page cache + miss batching +
+    in-flight prefetch joining + the StoreStats ledger.
 
-    A batch of block reads is resolved in three phases: (1) one VECTORIZED
+    A batch of block reads resolves in three phases: (1) one VECTORIZED
     cache lookup — the cache is a preallocated ``[cap, 2, BLKp]`` arena
     with a row->slot map, so a warm batch is a single numpy gather, not a
     per-row walk (duplicates inside the batch coalesce; each saved device
-    read counts as a hit); (2) unique misses fan out across ``qd`` pread
-    workers; (3) results land in the arena under the clock policy.
-    ``prefetch`` issues the same fan-out without blocking; in-flight
+    read counts as a hit); (2) unique misses go to the device through the
+    subclass hooks; (3) results land in the arena under the clock policy.
+    ``prefetch`` issues the same device path without blocking; in-flight
     prefetches are joined (not re-read) when a demand read wants the same
-    rows. Batched resolution + fan-out is exactly what "high queue depth"
-    buys the paper's async design — the mmap baseline processes the same
-    rows one synchronous read at a time.
+    rows.
+
+    Subclass hooks: ``_read_chunk(rows) -> {row: [2, BLKp]}`` performs the
+    actual device reads for one chunk, and ``_device_chunks(rows)`` splits
+    a miss batch into the chunks the device path wants (``aio``: one chunk
+    per pool worker; ``uring``: one chunk, the ring is the fan-out).
+    ``workers`` sizes the submitter pool.
     """
 
-    name = "aio"
-
-    def __init__(self, path, offset: int, nb: int, blkp: int, *,
-                 qd: int = 16, cache_rows: Optional[int] = None):
+    def __init__(self, nb: int, blkp: int, *, qd: int,
+                 cache_rows: Optional[int] = None, workers: int = None):
         super().__init__()
         if qd <= 0:
             raise ValueError(f"queue depth must be positive, got {qd}")
         self.nb, self.blkp = int(nb), int(blkp)
         self.qd = int(qd)
-        self._base = int(offset)
-        self._stride = 2 * self.blkp * 4
-        self._fd = os.open(os.fspath(path), os.O_RDONLY)
         cap = (max(1024, self.nb // 8) if cache_rows is None
                else int(cache_rows))
         self.cache_rows = cap = max(0, min(cap, self.nb))
@@ -190,24 +231,22 @@ class AioBlockStore(BlockStore):
         self._hand = 0
         self._lock = threading.Lock()
         self._inflight: dict = {}       # row -> Future of its prefetch chunk
-        self._pool = ThreadPoolExecutor(max_workers=self.qd,
-                                        thread_name_prefix="aio-blockstore")
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.qd if workers is None else int(workers),
+            thread_name_prefix=f"{self.name}-blockstore")
 
-    # -- raw device access --------------------------------------------------
-    def _pread_chunk(self, rows: np.ndarray) -> dict:
-        out = {}
-        for g in rows:
-            buf = os.pread(self._fd, self._stride,
-                           self._base + int(g) * self._stride)
-            if len(buf) != self._stride:
-                raise IOError(f"short read at block row {int(g)}")
-            out[int(g)] = np.frombuffer(buf, np.int32).reshape(2, self.blkp)
-        return out
+    # -- device hooks (subclasses) ------------------------------------------
+    def _read_chunk(self, rows: np.ndarray) -> dict:
+        raise NotImplementedError
+
+    def _device_chunks(self, rows: np.ndarray) -> list:
+        """Split a miss batch into device-path chunks (default: one chunk
+        per pool worker, up to ``qd``)."""
+        return np.array_split(rows, min(self.qd, rows.size))
 
     def _fan_out(self, rows: np.ndarray) -> list:
-        """Split ``rows`` across up to ``qd`` workers; returns the futures."""
-        chunks = np.array_split(rows, min(self.qd, rows.size))
-        return [self._pool.submit(self._pread_chunk, c) for c in chunks]
+        return [self._pool.submit(self._read_chunk, c)
+                for c in self._device_chunks(rows)]
 
     # -- clock arena (callers hold the lock) --------------------------------
     def _alloc_slot(self) -> int:
@@ -300,15 +339,13 @@ class AioBlockStore(BlockStore):
             if not todo:
                 return
             self.stats.prefetch_reads += len(todo)
-            chunks = np.array_split(np.asarray(todo, np.int64),
-                                    min(self.qd, len(todo)))
             submitted = []
-            for chunk in chunks:
-                fut = self._pool.submit(self._pread_chunk, chunk)
+            for chunk in self._device_chunks(np.asarray(todo, np.int64)):
+                fut = self._pool.submit(self._read_chunk, chunk)
                 for g in chunk:
                     self._inflight[int(g)] = fut
                 submitted.append((fut, chunk))
-        # register callbacks OUTSIDE the lock: a fast (page-cached) pread can
+        # register callbacks OUTSIDE the lock: a fast (page-cached) read can
         # complete before add_done_callback is reached, in which case the
         # callback runs inline in THIS thread — land() takes the lock, which
         # would self-deadlock on the non-reentrant lock if still held
@@ -317,21 +354,88 @@ class AioBlockStore(BlockStore):
 
     def close(self):
         self._pool.shutdown(wait=True)
+
+
+class AioBlockStore(CachedBlockStore):
+    """Asynchronous pread fan-out (the portable io_uring *emulation*): a
+    miss batch splits across ``qd`` pread workers — request-level
+    parallelism through the page cache, one syscall per read. Everything
+    else (cache, prefetch, ledger) is the shared CachedBlockStore engine.
+    The ``uring`` backend replaces exactly this hook with real kernel
+    queueing."""
+
+    name = "aio"
+
+    def __init__(self, path, offset: int, nb: int, blkp: int, *,
+                 qd: int = 16, cache_rows: Optional[int] = None):
+        self._base = int(offset)
+        self._stride = 2 * int(blkp) * 4
+        self._fd = os.open(os.fspath(path), os.O_RDONLY)
+        super().__init__(nb, blkp, qd=qd, cache_rows=cache_rows)
+
+    def _read_chunk(self, rows: np.ndarray) -> dict:
+        out = {}
+        for g in rows:
+            buf = os.pread(self._fd, self._stride,
+                           self._base + int(g) * self._stride)
+            if len(buf) != self._stride:
+                raise IOError(f"short read at block row {int(g)}")
+            out[int(g)] = np.frombuffer(buf, np.int32).reshape(2, self.blkp)
+        return out
+
+    def close(self):
+        super().close()
         if self._fd is not None:
             os.close(self._fd)
             self._fd = None
 
 
 def make_store(backend: str, path, hdr, *, qd: int = 16,
-               cache_rows: Optional[int] = None) -> BlockStore:
-    """Build a backend over a spilled file's ``blocks`` section."""
+               cache_rows: Optional[int] = None, direct: bool = True,
+               strict: bool = False) -> BlockStore:
+    """Build a backend over a spilled file's ``blocks`` section.
+
+    ``backend="uring"`` goes through the runtime capability probe
+    (:func:`repro.storage.uring.capabilities`) and falls back to the
+    ``aio`` thread pool when io_uring is unavailable (same contract, so
+    every caller keeps working); the returned store then carries
+    ``fallback_from="uring"`` and a ``fallback_reason``. ``strict=True``
+    raises instead (measurement lanes must not silently measure the
+    emulation). ``direct=False`` keeps the uring backend on buffered reads
+    even where O_DIRECT would work (see docs/storage.md on cache-defeating
+    measurement). ``REPRO_STORE_BACKEND`` overrides ``backend`` for every
+    call (see module docstring).
+    """
     if backend not in BACKENDS:
+        # validate the caller's choice BEFORE the env override so a typo'd
+        # backend fails loudly even inside a forced lane
         raise ValueError(f"unknown block-store backend {backend!r}; expected "
                          f"one of {BACKENDS}")
+    forced = store_backend_env()
+    if forced is not None:
+        backend = forced
     if backend == "mem":
         from .format import _read_section
         return MemBlockStore(np.asarray(_read_section(path, hdr, "blocks")))
     if backend == "mmap":
         return MmapBlockStore(path, hdr.blocks_offset, hdr.nb, hdr.blkp)
+    if backend == "uring":
+        from .uring import UringBlockStore, UringUnavailable
+        try:
+            return UringBlockStore(path, hdr.blocks_offset, hdr.nb, hdr.blkp,
+                                   qd=qd, cache_rows=cache_rows,
+                                   direct=direct)
+        except UringUnavailable as e:
+            if strict:
+                raise
+            import warnings
+            warnings.warn(f"uring block store unavailable ({e}); falling "
+                          "back to the aio thread-pool backend",
+                          RuntimeWarning, stacklevel=2)
+            store = AioBlockStore(path, hdr.blocks_offset, hdr.nb, hdr.blkp,
+                                  qd=qd, cache_rows=cache_rows)
+            store.fallback_from = "uring"
+            store.fallback_reason = str(e)
+            return store
     return AioBlockStore(path, hdr.blocks_offset, hdr.nb, hdr.blkp,
                          qd=qd, cache_rows=cache_rows)

@@ -76,6 +76,11 @@ class ExternalIndex:
     path: str
     stats: Optional[IndexStats] = None
     last_plan_stats: Optional["ExternalPlanStats"] = None
+    # chain steps of the NEXT rung pushed into the store's queue while the
+    # device fold runs (Eq. 7 overlap). 1 = chain heads only (PR 4
+    # behavior); deeper values keep an async backend's queue full across
+    # the rung boundary — worth raising with `uring` on a real device.
+    prefetch_depth: int = 1
 
     @property
     def backend(self) -> str:
@@ -307,16 +312,27 @@ def external_plan(ext: ExternalIndex, queries, cfg: QueryConfig,
             jnp.asarray(blocks_read), jnp.asarray(count), probe_sizes_t,
             jnp.int32(t), jnp.float32((cfg.c * float(cfg.radii[t])) ** 2),
             cfg)
-        # ... and hide the next rung's chain-head reads under it (Eq. 7's
-        # overlap: still-active queries' step-0 rows warm the cache while
-        # the distance epilogue computes)
+        # ... and hide the next rung's chain reads under it (Eq. 7's
+        # overlap): still-active queries' first `prefetch_depth` chain-step
+        # rows go into the store's queue while the distance epilogue
+        # computes. Depth 1 = heads only; deeper keeps an async backend's
+        # device queue full across the rung boundary.
         n_prefetch = 0
         if t + 1 < r:
             nxt = (cnt_np[t + 1] > 0) & active_q[:, None]
-            heads = head_np[t + 1][nxt]
-            n_prefetch = int(heads.size)
+            depth = max(1, int(ext.prefetch_depth))
+            nxt_cnt = cnt_np[t + 1][nxt]
+            nxt_head = head_np[t + 1][nxt]
+            rows = [nxt_head]
+            for j in range(1, min(depth, cfg.max_chain)):
+                deeper = nxt_cnt > j * cfg.block_objs
+                if not deeper.any():
+                    break
+                rows.append(nxt_head[deeper] + j)
+            rows = np.concatenate(rows) if len(rows) > 1 else rows[0]
+            n_prefetch = int(rows.size)
             if n_prefetch:
-                ext.store.prefetch(heads)
+                ext.store.prefetch(rows)
         t2 = time.perf_counter()
         done_np = np.asarray(state[2])          # blocks on the device fold
         t3 = time.perf_counter()

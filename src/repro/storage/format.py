@@ -49,12 +49,21 @@ from typing import Optional
 import numpy as np
 
 __all__ = ["StorageFormatError", "SpillHeader", "spill_index", "read_header",
-           "load_arrays", "load_external", "verify_file",
-           "MAGIC", "FORMAT_VERSION", "PAGE_SIZE"]
+           "load_arrays", "load_external", "verify_file", "aligned_extent",
+           "MAGIC", "FORMAT_VERSION", "PAGE_SIZE", "DIRECT_ALIGN_MIN"]
 
 MAGIC = b"E2LSHSPL"
 FORMAT_VERSION = 1
 PAGE_SIZE = 4096
+# O_DIRECT read granularity floor. ALIGNMENT GUARANTEES of the format:
+# every section (blocks included) starts on a PAGE_SIZE boundary and the
+# file is truncated to a page boundary, so for any block row g the aligned
+# covering extent [align_down(start), align_up(end)) at any alignment
+# <= PAGE_SIZE lies entirely inside the file — an O_DIRECT reader never
+# needs a read past EOF. Row *strides* (2 * blkp * 4 bytes) are NOT
+# guaranteed device-aligned (blkp is lane-padded, not sector-padded);
+# direct readers must read the covering extent — `aligned_extent` below.
+DIRECT_ALIGN_MIN = 512
 
 # resident IndexArrays leaves spilled as standalone sections (the block
 # store spills as the interleaved "blocks" section instead of its
@@ -99,6 +108,19 @@ class SpillHeader:
 
 def _page_pad(n: int, page_size: int) -> int:
     return -(-n // page_size) * page_size
+
+
+def aligned_extent(offset: int, nbytes: int, align: int = DIRECT_ALIGN_MIN):
+    """The aligned covering extent of ``[offset, offset + nbytes)``:
+    ``(astart, alen, inner)`` with ``astart % align == 0``,
+    ``alen % align == 0`` and the payload at ``[inner, inner + nbytes)`` of
+    the landing buffer. This is the read shape O_DIRECT requires (the
+    ``uring`` backend issues every demand read this way); the format's
+    page-aligned section layout guarantees the extent stays inside the
+    file for ``align <= PAGE_SIZE``."""
+    astart = (int(offset) // align) * align
+    alen = -(-(int(offset) + int(nbytes) - astart) // align) * align
+    return astart, alen, int(offset) - astart
 
 
 def spill_index(path, arrays, *, params=None, stats=None,
@@ -257,7 +279,8 @@ def load_arrays(path):
 
 
 def load_external(path, *, backend: str = "aio", qd: int = 16,
-                  cache_rows: Optional[int] = None):
+                  cache_rows: Optional[int] = None, direct: bool = True,
+                  strict: bool = False, prefetch_depth: int = 1):
     """Open a spilled index for external-memory querying.
 
     Hash tables, family params, the CSR view, and the DRAM tier load
@@ -265,9 +288,13 @@ def load_external(path, *, backend: str = "aio", qd: int = 16,
     :class:`~repro.storage.blockstore.BlockStore` backend (``mem`` — the
     in-memory parity oracle; ``mmap`` — synchronous QD1 page-cache reads;
     ``aio`` — ``qd``-way pread fan-out with a clock page cache of
-    ``cache_rows`` block rows). Returns an
-    :class:`~repro.storage.external.ExternalIndex` that ``SearchEngine``
-    serves under ``plan="external"``.
+    ``cache_rows`` block rows; ``uring`` — io_uring wave submission with
+    O_DIRECT demand reads where supported, falling back to ``aio`` unless
+    ``strict``). ``direct=False`` keeps uring on buffered reads;
+    ``prefetch_depth`` is how many chain steps of the next rung the
+    external plan pushes into the store's queue under device compute.
+    Returns an :class:`~repro.storage.external.ExternalIndex` that
+    ``SearchEngine`` serves under ``plan="external"``.
     """
     import jax.numpy as jnp
 
@@ -285,7 +312,8 @@ def load_external(path, *, backend: str = "aio", qd: int = 16,
     params = LSHParams(**pdict)
     resident = {name: _read_section(path, hdr, name)
                 for name in _EXTERNAL_FIELDS}
-    store = make_store(backend, path, hdr, qd=qd, cache_rows=cache_rows)
+    store = make_store(backend, path, hdr, qd=qd, cache_rows=cache_rows,
+                       direct=direct, strict=strict)
     stats = None
     if hdr.stats is not None:
         from ..core.index import IndexStats
@@ -300,4 +328,5 @@ def load_external(path, *, backend: str = "aio", qd: int = 16,
         db_norm2=jnp.asarray(resident["db_norm2"]),
         block_objs=hdr.block_objs, lane_pad=hdr.lane_pad, blkp=hdr.blkp,
         store=store, path=str(path), stats=stats,
+        prefetch_depth=int(prefetch_depth),
     )

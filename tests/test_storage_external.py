@@ -19,7 +19,16 @@ from repro import storage as st
 
 _EXACT_FIELDS = ("ids", "found", "radii_searched", "nio_table", "nio_blocks",
                  "cands_checked")
-_BACKENDS = ("mem", "mmap", "aio")
+_BACKENDS = ("mem", "mmap", "aio", "uring")
+
+
+def _require_uring(path) -> None:
+    """Skip (with the probe's reason) where the real uring store can't run —
+    the capability probe is the SAME gate make_store uses, so this skip
+    fires exactly when production would fall back to aio."""
+    caps = st.capabilities(path)
+    if not caps["uring_store"]:
+        pytest.skip(f"io_uring unavailable: {caps['io_uring_reason']}")
 
 
 def _assert_matches(ref, out, *, probe_sizes=False):
@@ -160,6 +169,8 @@ def test_external_plan_matches_fused(storage_index, spilled, hard_queries,
                                      backend):
     """The acceptance contract: external == fused on every field, any
     backend, measured N_io == runtime counters."""
+    if backend == "uring":
+        _require_uring(str(spilled))
     ref = SearchEngine(storage_index[0]).query(hard_queries, plan="fused",
                                                k=3, collect_probe_sizes=True)
     with st.load_external(spilled, backend=backend, qd=8) as ext:
@@ -169,7 +180,12 @@ def test_external_plan_matches_fused(storage_index, spilled, hard_queries,
         out = engine.query(hard_queries, k=3, collect_probe_sizes=True)
         _assert_matches(ref, out, probe_sizes=True)
         ps = engine.last_external_stats
-        assert ps.backend == backend
+        # under a forced lane (REPRO_STORE_BACKEND) the env wins; a forced
+        # uring lane without io_uring resolves to the documented fallback
+        expected = st.store_backend_env() or backend
+        if expected == "uring" and not st.capabilities(str(spilled))["uring_store"]:
+            expected = "aio"
+        assert ps.backend == expected
         assert ps.measured_nio_blocks == ps.nio_blocks_counted
         assert ps.measured_nio_blocks == int(np.asarray(out.nio_blocks).sum())
         assert len(ps.rungs) >= 1
@@ -281,14 +297,18 @@ def test_store_counters_ledger(spilled):
 # Serving: BatchQueue over plan="external"
 # --------------------------------------------------------------------------
 
-def test_batch_queue_over_external_plan(storage_index, spilled):
+@pytest.mark.parametrize("backend", ("aio", "uring"))
+def test_batch_queue_over_external_plan(storage_index, spilled, backend):
     """Queued ragged requests through the external plan are bit-exact with
     direct external dispatch per request — the queue's parity contract
-    holds when the block rows come from disk."""
+    holds when the block rows come from disk (through the thread-pool
+    emulation and through the real io_uring engine alike)."""
     from repro.serving import BatchQueue
 
+    if backend == "uring":
+        _require_uring(str(spilled))
     q = storage_index[1]
-    with st.load_external(spilled, backend="aio", qd=8) as ext:
+    with st.load_external(spilled, backend=backend, qd=8) as ext:
         engine = SearchEngine(ext)
         queue = BatchQueue(engine, k=2, ladder=(4, 8), tick_us=50.0)
         assert queue.plan == "external"
@@ -307,3 +327,166 @@ def test_batch_queue_over_external_plan(storage_index, spilled):
         assert s["dispatches"] == s["ticks"]
         assert "external_store" in s
         assert s["external_store"]["reads"] > 0
+
+
+# --------------------------------------------------------------------------
+# The uring async engine: capability gate, fallback, env override, O_DIRECT
+# --------------------------------------------------------------------------
+
+def test_capabilities_report_shape(spilled):
+    """The runtime probe reports every key the lanes and docs rely on, and
+    `uring_store` agrees with the io_uring probe (O_DIRECT is optional)."""
+    caps = st.capabilities(str(spilled))
+    for key in ("io_uring", "io_uring_reason", "o_direct_align",
+                "o_direct_reason", "uring_store", "kernel"):
+        assert key in caps, f"capabilities() lost key {key!r}"
+    assert caps["uring_store"] == caps["io_uring"]
+    assert caps["o_direct_align"] in (0, 512, 4096)
+    ok, reason = st.probe_io_uring()
+    assert ok == caps["io_uring"] and isinstance(reason, str)
+
+
+def test_aligned_extent_covers_and_aligns():
+    """aligned_extent returns an aligned covering extent for any offset,
+    and the payload slice lands inside it."""
+    for align in (512, 4096):
+        for offset in (0, 1, 511, 512, 4096 + 64, 123457):
+            for nbytes in (1, 64, 512, 833):
+                astart, alen, inner = st.aligned_extent(offset, nbytes, align)
+                assert astart % align == 0 and alen % align == 0
+                assert astart <= offset
+                assert astart + alen >= offset + nbytes
+                assert inner == offset - astart and 0 <= inner < align
+
+
+def test_uring_fallback_to_aio_and_strict(spilled, monkeypatch):
+    """Where io_uring can't run, make_store('uring') degrades to the aio
+    backend (tagged with the reason) unless strict — the graceful-fallback
+    contract that keeps every uring-requesting caller working anywhere."""
+    import repro.storage.uring as uring_mod
+
+    monkeypatch.setattr(uring_mod, "probe_io_uring",
+                        lambda: (False, "forced off by test"))
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        ext = st.load_external(spilled, backend="uring", qd=4)
+    with ext:
+        assert ext.store.name == "aio"
+        assert ext.store.fallback_from == "uring"
+        assert "forced off" in ext.store.fallback_reason
+        out = SearchEngine(ext).query(np.asarray(ext.db[:4]) * 1.01, k=1)
+        assert np.asarray(out.found).any()
+    with pytest.raises(st.UringUnavailable):
+        st.load_external(spilled, backend="uring", strict=True)
+
+
+def test_store_backend_env_override(spilled, monkeypatch):
+    """REPRO_STORE_BACKEND pins every make_store call to one backend (the
+    REPRO_FORCE_PALLAS lane idiom); unknown values fail loudly."""
+    monkeypatch.setenv(st.STORE_BACKEND_ENV, "mem")
+    assert st.store_backend_env() == "mem"
+    with st.load_external(spilled, backend="aio") as ext:
+        assert ext.store.name == "mem"       # the override won
+    monkeypatch.setenv(st.STORE_BACKEND_ENV, "warp9")
+    with pytest.raises(ValueError, match="REPRO_STORE_BACKEND"):
+        st.load_external(spilled, backend="aio")
+    monkeypatch.delenv(st.STORE_BACKEND_ENV)
+    assert st.store_backend_env() is None
+
+
+def test_uring_buffered_mode_parity(storage_index, spilled, hard_queries):
+    """direct=False keeps the ring but reads through the page cache — the
+    submission discipline alone must not change any result."""
+    _require_uring(str(spilled))
+    ref = SearchEngine(storage_index[0]).query(hard_queries, plan="fused",
+                                               k=2)
+    with st.load_external(spilled, backend="uring", qd=8,
+                          direct=False) as ext:
+        assert ext.store.name == "uring" and not ext.store.o_direct
+        out = SearchEngine(ext).query(hard_queries, k=2)
+        _assert_matches(ref, out)
+
+
+def test_uring_wave_larger_than_ring(storage_index, spilled):
+    """A miss batch bigger than the ring splits into waves internally —
+    reads stay correct and the ledger still balances."""
+    _require_uring(str(spilled))
+    idx, _ = storage_index
+    nb = int(idx.index.arrays.ids_blocks.shape[0])
+    rows = np.arange(1, min(nb, 130), dtype=np.int64)   # >> qd=4 ring
+    with st.load_external(spilled, backend="uring", qd=4) as ext:
+        ids, fps = ext.store.read_rows(rows)
+        want_ids = np.asarray(idx.index.arrays.ids_blocks)[rows]
+        want_fps = np.asarray(idx.index.arrays.fps_blocks)[rows]
+        np.testing.assert_array_equal(ids, want_ids)
+        np.testing.assert_array_equal(fps, want_fps)
+        s = ext.store.stats
+        assert s.reads == s.device_reads + s.cache_hits == rows.size
+
+
+# --------------------------------------------------------------------------
+# StoreStats invariants under concurrency
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ("aio", "uring"))
+def test_store_stats_ledger_under_concurrency(storage_index, spilled,
+                                              backend):
+    """prefetch() racing read_rows() across threads: the ledger must keep
+    `reads == device_reads + cache_hits` exactly, `reads` must equal the
+    demand rows requested (prefetch_reads NEVER leak into logical N_io),
+    and every returned row must be correct."""
+    import threading
+
+    if backend == "uring":
+        _require_uring(str(spilled))
+    idx, _ = storage_index
+    blocks = np.stack([np.asarray(idx.index.arrays.ids_blocks),
+                       np.asarray(idx.index.arrays.fps_blocks)], axis=1)
+    nb = blocks.shape[0]
+    rng = np.random.default_rng(11)
+    n_workers, n_rounds, batch = 4, 12, 48
+    demand = rng.integers(1, nb, size=(n_workers, n_rounds, batch))
+    spec_rows = rng.integers(1, nb, size=(n_rounds, batch))
+
+    with st.load_external(spilled, backend=backend, qd=8,
+                          cache_rows=max(8, nb // 4)) as ext:
+        store = ext.store
+        errors = []
+
+        def reader(w):
+            try:
+                for r in range(n_rounds):
+                    rows = demand[w, r]
+                    ids, fps = store.read_rows(rows)
+                    if not (np.array_equal(ids, blocks[rows, 0])
+                            and np.array_equal(fps, blocks[rows, 1])):
+                        errors.append(f"worker {w} round {r}: wrong data")
+                        return
+            except Exception as e:          # pragma: no cover - diagnostic
+                errors.append(f"worker {w}: {e!r}")
+
+        def prefetcher():
+            try:
+                for r in range(n_rounds):
+                    store.prefetch(spec_rows[r])
+            except Exception as e:          # pragma: no cover - diagnostic
+                errors.append(f"prefetcher: {e!r}")
+
+        threads = ([threading.Thread(target=reader, args=(w,))
+                    for w in range(n_workers)]
+                   + [threading.Thread(target=prefetcher)])
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        # drain in-flight prefetch landings before reading the ledger
+        store._pool.shutdown(wait=True)
+        assert not errors, errors
+
+        s = store.stats
+        assert s.reads == s.device_reads + s.cache_hits, (
+            f"ledger broke under the race: reads={s.reads} != "
+            f"device={s.device_reads} + hits={s.cache_hits}")
+        assert s.reads == demand.size, (
+            "logical N_io drifted from the demand rows requested "
+            f"({s.reads} != {demand.size}) — prefetch leaked into reads")
+        assert s.prefetch_reads <= spec_rows.size
