@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: verify test bench-query bench-smoke deprecation-lane kernel-lane \
-	storage-lane uring-lane deps
+	storage-lane uring-lane qos-lane deps
 
 deps:
 	$(PY) -m pip install -r requirements.txt
@@ -58,6 +58,16 @@ storage-lane:
 	REPRO_FORCE_PALLAS=interpret $(PY) -m pytest \
 	tests/test_storage_external.py \
 	tests/test_io_count.py::test_external_plan_measured_nio_matches_replay -q
+
+# serving-tier lane: the sharded external spill (per-shard files + manifest,
+# plan="sharded_external" parity + exact per-shard N_io roll-up) and the QoS
+# tick router (priority/EDF packing, deadline shedding with the typed
+# DeadlineExceeded, adaptive ladder, cache warming) under the forced
+# interpret kernel path. The uring-forced queue test inside gates itself on
+# the capability probe, so the lane runs everywhere.
+qos-lane:
+	REPRO_FORCE_PALLAS=interpret $(PY) -m pytest \
+	tests/test_sharded_external.py tests/test_serving_qos.py -q
 
 # async-engine lane: force EVERY make_store call onto the uring backend
 # (REPRO_STORE_BACKEND — the storage twin of REPRO_FORCE_PALLAS) and run

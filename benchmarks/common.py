@@ -176,6 +176,22 @@ def get_all(datasets=DEFAULT_DATASETS, **kw) -> Dict[str, DatasetBench]:
     return {name: get_bench(name, **kw) for name in datasets}
 
 
+def measured_qd_sweep(path=None) -> Optional[dict]:
+    """The measured QD sweep from a published BENCH_query.json (repo root by
+    default), or None when no payload has been published. The fig4-8 scripts
+    overlay these measured per-QD IOPS next to the Eq. 12-16 requirement
+    curves, so the "does a real device clear the bar" read comes from this
+    machine's storage engine and not only the paper's device table."""
+    p = pathlib.Path(path) if path else pathlib.Path(__file__).parent.parent / "BENCH_query.json"
+    if not p.exists():
+        return None
+    try:
+        payload = json.loads(p.read_text())
+    except (json.JSONDecodeError, OSError):
+        return None
+    return payload.get("qd_sweep")
+
+
 def emit(rows, header=("name", "us_per_call", "derived")):
     print(",".join(header))
     for r in rows:

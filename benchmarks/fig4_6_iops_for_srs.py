@@ -8,7 +8,7 @@ import numpy as np
 
 from repro.core.io_count import nio_for_block_size
 from repro.core.storage import DEVICES, required_iops_async, required_request_rate_async
-from .common import emit, get_all
+from .common import emit, get_all, measured_qd_sweep
 
 
 def run(benches=None):
@@ -42,6 +42,24 @@ def run(benches=None):
             req = required_iops_async(info["t_srs"], info["nio"])
             rows.append((f"fig6.{name}.k{k}", "",
                          f"required_kiops={req/1e3:.0f}"))
+
+    # measured overlay: this machine's per-QD IOPS from the published
+    # BENCH_query.json qd_sweep (when present), next to the requirement
+    # curves — the paper's "one cSSD at QD128 clears it" check, measured
+    sw = measured_qd_sweep()
+    if sw is not None:
+        for curve in sw["curves"]:
+            rows.append((
+                f"fig4.measured.B{curve['block_bytes']}.sync", "",
+                f"measured_kiops={curve['iops_sync']/1e3:.1f};"
+                f"backend=mmap;qd=1;cache={sw['cache_mode']}"))
+            for pt in curve["points"]:
+                rows.append((
+                    f"fig4.measured.B{curve['block_bytes']}.qd{pt['qd']}", "",
+                    f"measured_kiops={pt['iops_measured']/1e3:.1f};"
+                    f"model_device_kiops={pt['model_device_iops']/1e3:.1f};"
+                    f"backend={sw['async_backend']};"
+                    f"cache={sw['cache_mode']}"))
     emit(rows)
     return rows
 

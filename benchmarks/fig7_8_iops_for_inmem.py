@@ -5,7 +5,7 @@ from __future__ import annotations
 from repro.core.storage import (DEVICES, INTERFACES,
                                 inmem_request_rate_requirement,
                                 required_iops_async)
-from .common import emit, get_all
+from .common import emit, get_all, measured_qd_sweep
 
 
 def run(benches=None):
@@ -27,6 +27,20 @@ def run(benches=None):
             iops_req = required_iops_async(info["t_e2lsh"], info["nio"])
             rows.append((f"fig8.{name}.k{k}", "",
                          f"required_miops={iops_req/1e6:.2f}"))
+
+    # measured overlay: this machine's per-QD IOPS (published qd_sweep) in
+    # the same MIOPS units as the Eq. 15 requirement — the measured gap to
+    # in-memory-speed storage, next to the paper's device-table gap
+    sw = measured_qd_sweep()
+    if sw is not None:
+        for curve in sw["curves"]:
+            for pt in curve["points"]:
+                rows.append((
+                    f"fig7.measured.B{curve['block_bytes']}.qd{pt['qd']}", "",
+                    f"measured_miops={pt['iops_measured']/1e6:.3f};"
+                    f"model_device_miops={pt['model_device_iops']/1e6:.3f};"
+                    f"backend={sw['async_backend']};"
+                    f"cache={sw['cache_mode']}"))
     emit(rows)
     return rows
 

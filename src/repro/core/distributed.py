@@ -107,6 +107,74 @@ class ShardedIndexArrays:
         )
         return dataclasses.replace(self, arrays=arrays)
 
+    def to_global(self) -> IndexArrays:
+        """Reassemble the ONE global index this sharded build partitions.
+
+        Every shard hashes with the SHARED family, and the partition is a
+        range partition, so a global bucket's entries are exactly the
+        concatenation of its per-shard entries in shard order (ascending
+        global id — the same order a single-node ``build_index(db, params,
+        family=family)`` packs). The result re-blockifies through the one
+        conversion path (``IndexArrays.from_csr``), giving the global
+        chain-block layout the storage tier spills — which is NOT the
+        per-shard layout (``sum(ceil(cnt_s/BLK)) != ceil(cnt/BLK)``); that
+        difference is why the sharded-external plan stripes THIS index
+        instead of spilling the per-shard stores.
+        """
+        ix = self.arrays
+        sh = self.num_shards
+        offs = np.asarray(self.shard_offsets, np.int64)
+        bounds = np.append(offs, int(self.params.n))
+        cnt = np.asarray(ix.table_cnt, np.int64)        # [SH, r, L, 2^u]
+        off = np.asarray(ix.table_off, np.int64)
+        gcnt = cnt.sum(axis=0)
+        flat = gcnt.reshape(-1)
+        goff = np.zeros_like(flat)
+        np.cumsum(flat[:-1], out=goff[1:])
+        total = int(flat.sum())
+        gid = np.zeros((total,), dtype=np.asarray(ix.entries_id).dtype)
+        gfp = np.zeros((total,), dtype=np.asarray(ix.entries_fp).dtype)
+        before = np.cumsum(cnt, axis=0) - cnt   # earlier shards' entries/bucket
+        for s in range(sh):
+            c = cnt[s].reshape(-1)
+            o = off[s].reshape(-1)
+            nz = np.nonzero(c > 0)[0]
+            if nz.size == 0:
+                continue
+            reps = c[nz]
+            # per-bucket ramp 0..cnt-1 without a Python loop over buckets
+            ramp = (np.arange(int(reps.sum()), dtype=np.int64)
+                    - np.repeat(np.cumsum(reps) - reps, reps))
+            src = np.repeat(o[nz], reps) + ramp
+            dst = np.repeat(goff[nz] + before[s].reshape(-1)[nz], reps) + ramp
+            gid[dst] = np.asarray(ix.entries_id[s])[src] + offs[s]
+            gfp[dst] = np.asarray(ix.entries_fp[s])[src]
+        db = np.concatenate(
+            [np.asarray(ix.db[s])[: int(bounds[s + 1] - bounds[s])]
+             for s in range(sh)], axis=0)
+        toff = np.where(flat > 0, goff, -1).reshape(gcnt.shape)
+        return IndexArrays.from_csr(
+            a=ix.a, b=ix.b, rm=ix.rm,
+            table_off=toff, table_cnt=gcnt.astype(np.int32),
+            entries_id=gid, entries_fp=gfp, db=db,
+            block_objs=ix.block_objs, lane_pad=ix.lane_pad,
+        )
+
+    def spill(self, path, *, params=None, stats=None) -> dict:
+        """Write this sharded index as a sharded external-memory spill
+        directory: the GLOBAL index's block store striped round-robin over
+        ``num_shards`` crc-guarded files, resident sections, and a
+        versioned ``MANIFEST.json`` (``repro.storage.spill_index_sharded``;
+        format in docs/storage.md). Serve it with
+        ``repro.storage.load_external_sharded(path)`` under
+        ``plan="sharded_external"`` — bit-exact with ``plan="fused"`` over
+        ``to_global()``. Returns the manifest payload."""
+        from ..storage.format import spill_index_sharded
+        return spill_index_sharded(
+            path, self.to_global(), self.num_shards,
+            params=params if params is not None else self.params,
+            stats=stats)
+
 
 def _pad_rows(x: np.ndarray, rows: int, fill) -> np.ndarray:
     pad = rows - x.shape[0]

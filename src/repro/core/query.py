@@ -607,6 +607,7 @@ class SearchEngine:
     SINGLE_PLANS = ("fused", "host", "oracle")
     SHARDED_PLANS = ("sharded", "oracle")
     EXTERNAL_PLANS = ("external",)
+    SHARDED_EXTERNAL_PLANS = ("sharded_external",)
 
     def __init__(self, index, *, mesh=None, index_axes=("shard",),
                  query_axes=()):
@@ -619,8 +620,11 @@ class SearchEngine:
         self._single = self._sharded = self._external = None
         if hasattr(index, "store") and hasattr(index, "blocks_head"):
             # ExternalIndex (repro.storage): block rows live on disk behind
-            # the BlockStore; there is no in-memory IndexArrays to serve
+            # the BlockStore; there is no in-memory IndexArrays to serve.
+            # A ShardedExternalIndex (striped per-shard stores) carries a
+            # num_shards attr and serves under plan="sharded_external".
             self._external = index
+            self._external_striped = hasattr(index, "num_shards")
             self._base_block_objs = index.block_objs
             self._by_block_objs = {}
             return
@@ -637,13 +641,14 @@ class SearchEngine:
     @property
     def plans(self) -> tuple:
         if self._external is not None:
-            return self.EXTERNAL_PLANS
+            return (self.SHARDED_EXTERNAL_PLANS if self._external_striped
+                    else self.EXTERNAL_PLANS)
         return self.SHARDED_PLANS if self._sharded is not None else self.SINGLE_PLANS
 
     @property
     def default_plan(self) -> str:
         if self._external is not None:
-            return "external"
+            return "sharded_external" if self._external_striped else "external"
         return "sharded" if self._sharded is not None else "fused"
 
     @property
@@ -718,20 +723,28 @@ class SearchEngine:
         if valid is not None:
             valid = jnp.asarray(valid, dtype=bool)
         if self._external is not None:
-            if plan not in self.EXTERNAL_PLANS:
+            allowed = self.plans
+            if plan not in allowed:
                 raise ValueError(
                     f"unknown plan {plan!r} for an external index; expected "
-                    f"one of {self.EXTERNAL_PLANS} (load the index in memory "
+                    f"one of {allowed} (load the index in memory "
                     "for the fused/oracle plans)")
             if s_cap_per_shard is not None:
-                raise ValueError("s_cap_per_shard only applies to sharded "
-                                 "plans")
+                raise ValueError("s_cap_per_shard only applies to the "
+                                 "in-memory sharded plans (the striped "
+                                 "external plan keeps the global S budget — "
+                                 "that is what makes it bit-exact with "
+                                 "fused)")
             # the on-disk layout is fixed at spill time: the store's block
             # size is the ONLY valid cfg.block_objs (external_plan enforces)
             bo = (block_objs if block_objs is not None
                   else self._external.block_objs)
             cfg = self.config(k=k, collect_probe_sizes=collect_probe_sizes,
                               s_cap=s_cap, block_objs=bo)
+            if self._external_striped:
+                from ..storage.sharded import sharded_external_plan
+                return sharded_external_plan(self._external, queries, cfg,
+                                             valid)
             from ..storage.external import external_plan
             return external_plan(self._external, queries, cfg, valid)
         if self._sharded is not None:
@@ -783,21 +796,25 @@ class SearchEngine:
         inert)."""
         plan = plan or self.default_plan
         if self._external is not None:
-            if plan not in self.EXTERNAL_PLANS:
+            allowed = self.plans
+            if plan not in allowed:
                 raise ValueError(
                     f"unknown plan {plan!r} for an external index; expected "
-                    f"one of {self.EXTERNAL_PLANS}")
+                    f"one of {allowed}")
             bo = kw.pop("block_objs", None)
             cfg = self.config(k=k, block_objs=(
                 bo if bo is not None else self._external.block_objs), **kw)
-            from ..storage.external import external_plan
+            if self._external_striped:
+                from ..storage.sharded import sharded_external_plan as run_ext
+            else:
+                from ..storage.external import external_plan as run_ext
             ext = self._external
             if masked:
                 def fn(queries, valid):
-                    return external_plan(ext, queries, cfg, valid)
+                    return run_ext(ext, queries, cfg, valid)
             else:
                 def fn(queries):
-                    return external_plan(ext, queries, cfg)
+                    return run_ext(ext, queries, cfg)
             return cfg, fn
         if self._sharded is not None:
             # the sharded executor rebuilds its per-shard config from params

@@ -10,6 +10,12 @@ serving with optional kNN retrieval over an E2LSHoS index.
     PYTHONPATH=src python -m repro.launch.serve --mode ann --queue \
         --tick-us 200 --max-batch 128 --queries 256
 
+    # sharded external-memory serving with QoS deadlines: blocks striped
+    # across 2 per-shard spill files behind io_uring, queued requests shed
+    # with DeadlineExceeded when their budget expires
+    PYTHONPATH=src python -m repro.launch.serve --mode ann --queue \
+        --shards 2 --store uring --deadline-ms 50
+
     # LM decode with retrieval over the model's own hidden states
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch mamba2-1.3b \
         --reduced --steps 8 --retrieval
@@ -29,7 +35,7 @@ from ..core import E2LSHoS, SearchEngine, measured_query, overall_ratio
 from ..core.distributed import build_sharded_index
 from ..data import make_dataset
 from ..models import Model
-from ..serving import BatchQueue, ServeEngine
+from ..serving import BatchQueue, DeadlineExceeded, ServeEngine
 
 
 def _ragged_requests(queries: np.ndarray, *, max_batch: int, seed: int):
@@ -64,36 +70,58 @@ def serve_ann_queued(args, engine: SearchEngine, queries: np.ndarray,
     jax.block_until_ready(direct[-1].ids)
     t_direct = time.perf_counter() - t0
 
+    deadline_ms = getattr(args, "deadline_ms", None)
     t0 = time.perf_counter()
     with queue:
-        tickets = [queue.submit(r) for r in requests]
-        results = [t.result(timeout=600) for t in tickets]
+        tickets = [queue.submit(r, deadline_ms=deadline_ms) for r in requests]
+        # grade only the served requests (the shed ones return no dists);
+        # requests are consumed in stream order, so gt rows line up
+        served, served_rows, lo = [], 0, 0
+        for t, r in zip(tickets, requests):
+            hi = lo + r.shape[0]
+            try:
+                served.append((t.result(timeout=600), gt_dists[lo:hi, :args.k]))
+                served_rows += r.shape[0]
+            except DeadlineExceeded:
+                pass   # shed by the QoS router; counted below
+            lo = hi
     t_queued = time.perf_counter() - t0
     rows = queries.shape[0]
     s = queue.stats_summary()
     ratio = overall_ratio(
-        np.concatenate([np.asarray(r.dists) for r in results]),
-        gt_dists[:rows, :args.k])
+        np.concatenate([np.asarray(res.dists) for res, _ in served]),
+        np.concatenate([g for _, g in served]))
     print(f"[queue] {len(requests)} requests / {rows} rows in "
           f"{s['ticks']} ticks ({s['dispatches']} dispatches); "
           f"occupancy {s['occupancy_mean']:.2f}, pad waste {s['pad_waste']:.2f}")
     print(f"[queue] dispatch p50 {s['p50_dispatch_ms']:.2f} ms / "
           f"p99 {s['p99_dispatch_ms']:.2f} ms; ratio={ratio:.4f}")
-    print(f"[queue] qps {rows / t_queued:.0f} queued vs {rows / t_direct:.0f} "
-          f"direct ({t_direct / t_queued:.2f}x)")
+    qos = s["qos"]
+    if deadline_ms is not None:
+        print(f"[queue] qos: deadline {deadline_ms:.0f}ms, "
+              f"hit rate {qos.get('deadline_hit_rate', 1.0):.3f}, "
+              f"shed {qos['shed']}/{qos['tickets']} tickets")
+    print(f"[queue] qps {served_rows / t_queued:.0f} queued vs "
+          f"{rows / t_direct:.0f} direct ({t_direct / t_queued:.2f}x)")
 
 
 def serve_ann_external(args, ds):
     """--store mmap|aio|uring: build, spill, and serve the index FROM STORAGE
     through plan="external" (block rows on disk behind the selected
-    BlockStore backend; hash tables + coordinates resident)."""
+    BlockStore backend; hash tables + coordinates resident). With
+    --shards N > 1 the block file is striped round-robin across N per-shard
+    spill files (the paper's multi-drive layout) and served through
+    plan="sharded_external" — bit-exact with the single-file plan, with a
+    per-shard I/O ledger rolled into the global one."""
     import pathlib
     import tempfile
 
-    from ..storage import load_external
+    from ..storage import load_external, load_external_sharded
 
     import contextlib
 
+    shards = max(1, int(getattr(args, "shards", 1)))
+    plan = "sharded_external" if shards > 1 else "external"
     idx = E2LSHoS.build(ds.db, gamma=args.gamma, max_L=args.max_L,
                         seed=args.seed)
     with contextlib.ExitStack() as stack:
@@ -102,31 +130,53 @@ def serve_ann_external(args, ds):
         else:              # scratch spill: cleaned up on exit
             tmp = stack.enter_context(
                 tempfile.TemporaryDirectory(prefix="serve_spill_"))
-            spill = pathlib.Path(tmp) / "index.e2l"
-        idx.index.spill(spill)
-        print(f"[external] spilled {spill.stat().st_size/1e6:.1f} MB -> "
-              f"{spill} (backend={args.store}, qd={args.qd})")
-        ext = stack.enter_context(
-            load_external(spill, backend=args.store, qd=args.qd,
-                          direct=getattr(args, "direct", True)))
+            spill = pathlib.Path(tmp) / ("index" if shards > 1
+                                         else "index.e2l")
+        if shards > 1:
+            from ..storage import spill_index_sharded
+            spill_index_sharded(spill, idx.index.arrays, shards,
+                                params=idx.index.params,
+                                stats=idx.index.stats)
+            size = sum(f.stat().st_size for f in spill.iterdir())
+            print(f"[external] spilled {size/1e6:.1f} MB -> {spill} "
+                  f"({shards} shard stripes; backend={args.store}, "
+                  f"qd={args.qd})")
+            ext = stack.enter_context(
+                load_external_sharded(spill, backend=args.store, qd=args.qd,
+                                      direct=getattr(args, "direct", True)))
+        else:
+            idx.index.spill(spill)
+            print(f"[external] spilled {spill.stat().st_size/1e6:.1f} MB -> "
+                  f"{spill} (backend={args.store}, qd={args.qd})")
+            ext = stack.enter_context(
+                load_external(spill, backend=args.store, qd=args.qd,
+                              direct=getattr(args, "direct", True)))
         engine = SearchEngine(ext)
-        if ext.store.name != args.store:
-            print(f"[external] NOTE: requested backend {args.store!r} fell "
-                  f"back to {ext.store.name!r} "
-                  f"({getattr(ext.store, 'fallback_reason', '?')})")
-        elif args.store == "uring":
-            mode = "O_DIRECT" if ext.store.o_direct else "buffered"
-            print(f"[external] uring engine up: qd={ext.store.qd}, {mode} "
-                  f"(align={ext.store.align})")
+        # startup provenance: the resolved backend, and — when the probe
+        # rejected the requested one — where it fell back from and why
+        fb_from = getattr(ext.store, "fallback_from", None)
+        fb_reason = getattr(ext.store, "fallback_reason", None)
+        print(f"[external] store backend={ext.store.name}"
+              + (f" shards={shards}" if shards > 1 else "")
+              + (f" fallback_from={fb_from} reason={fb_reason!r}"
+                 if fb_from else ""))
+        if ext.store.name == "uring":
+            st0 = ext.store.shards[0] if shards > 1 else ext.store
+            mode = "O_DIRECT" if st0.o_direct else "buffered"
+            print(f"[external] uring engine up: qd={st0.qd}, {mode} "
+                  f"(align={st0.align})")
         if args.queue:
-            serve_ann_queued(args, engine, ds.queries, ds.gt_dists,
-                             plan="external")
+            serve_ann_queued(args, engine, ds.queries, ds.gt_dists, plan=plan)
             s = ext.store.stats
             print(f"[external] store: {s.reads} block reads, "
                   f"hit rate {s.hit_rate:.2f}, {s.device_reads} device reads, "
                   f"{s.prefetch_reads} prefetched")
+            if shards > 1:
+                for i, ps in enumerate(ext.store.per_shard_stats()):
+                    print(f"[external]   shard {i}: {ps.reads} reads, "
+                          f"hit rate {ps.hit_rate:.2f}")
             return
-        _, fn = engine.make_plan_fn(plan="external", k=args.k)
+        _, fn = engine.make_plan_fn(plan=plan, k=args.k)
         jax.block_until_ready(fn(ds.queries).ids)       # warm compiles
         t0 = time.perf_counter()
         res = fn(ds.queries)
@@ -262,7 +312,18 @@ def main(argv=None):
                          "reads instead of O_DIRECT")
     ap.add_argument("--spill", default=None,
                     help="spill path for --store mmap|aio|uring "
-                         "(default: tmpdir)")
+                         "(default: tmpdir); a directory when --shards > 1")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="stripe the block file round-robin across N "
+                         "per-shard spill files and serve through "
+                         "plan=\"sharded_external\" (bit-exact with the "
+                         "single-file plan; per-shard I/O ledgers roll up)")
+    ap.add_argument("--deadline-ms", dest="deadline_ms", type=float,
+                    default=None,
+                    help="per-request deadline for --queue: requests still "
+                         "unserved when it expires are shed with "
+                         "DeadlineExceeded; the QoS hit rate and shed "
+                         "counts are reported after the run")
     ap.add_argument("--gamma", type=float, default=0.8)
     ap.add_argument("--max-L", dest="max_L", type=int, default=32)
     ap.add_argument("--arch", default="mamba2-1.3b")

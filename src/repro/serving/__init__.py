@@ -1,5 +1,5 @@
-from .engine import (BatchQueue, QueryTicket, TickStats,
+from .engine import (BatchQueue, DeadlineExceeded, QueryTicket, TickStats,
                      ServeEngine, GenerationResult)
 
-__all__ = ["BatchQueue", "QueryTicket", "TickStats",
+__all__ = ["BatchQueue", "DeadlineExceeded", "QueryTicket", "TickStats",
            "ServeEngine", "GenerationResult"]

@@ -31,13 +31,19 @@ import numpy as np
 from ..core.query import QueryResult, SearchEngine
 from ..models.model import Model
 
-__all__ = ["BatchQueue", "QueryTicket", "TickStats",
+__all__ = ["BatchQueue", "DeadlineExceeded", "QueryTicket", "TickStats",
            "ServeEngine", "GenerationResult"]
 
 
 # --------------------------------------------------------------------------
 # Dynamic micro-batching over the fused plan
 # --------------------------------------------------------------------------
+
+class DeadlineExceeded(RuntimeError):
+    """A queued request's deadline expired before its tick could serve it;
+    the QoS router shed it (fail-fast at pack time) instead of spending
+    tick rows on a result nobody is waiting for."""
+
 
 @dataclasses.dataclass
 class TickStats:
@@ -50,6 +56,19 @@ class TickStats:
     pad_rows: int        # masked padding rows (shape - rows)
     occupancy: float     # rows / shape
     dispatch_ms: float   # wall time of the single fused dispatch
+    shed: int = 0        # tickets shed (DeadlineExceeded) at this tick's pack
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One enqueued request segment awaiting a tick."""
+
+    ticket: "QueryTicket"
+    seg_idx: int
+    seg: np.ndarray            # [b, d]
+    priority: int              # 0 = highest; strict across classes
+    deadline: Optional[float]  # absolute time.monotonic(), None = none
+    seq: int                   # submission order (the FIFO tiebreaker)
 
 
 class QueryTicket:
@@ -57,13 +76,20 @@ class QueryTicket:
     segments that spill across consecutive ticks; the ticket reassembles the
     full ``QueryResult`` (row order preserved) once every segment landed."""
 
-    def __init__(self, n_segments: int):
+    def __init__(self, n_segments: int, *, priority: int = 0,
+                 deadline: Optional[float] = None,
+                 submit_t: Optional[float] = None):
         self._parts: list = [None] * n_segments
         self._remaining = n_segments
         self._lock = threading.Lock()   # segments may land from racing ticks
         self._event = threading.Event()
         self._result: Optional[QueryResult] = None
         self._error: Optional[BaseException] = None
+        self.priority = int(priority)
+        self.deadline = deadline            # absolute monotonic, or None
+        self.submit_t = (time.monotonic() if submit_t is None
+                         else float(submit_t))
+        self._qos_logged = False            # one QoS record per ticket
 
     def _deliver(self, seg_idx: int, part: QueryResult) -> None:
         with self._lock:
@@ -88,13 +114,16 @@ class QueryTicket:
 
     def result(self, timeout: Optional[float] = None) -> QueryResult:
         """Block until served (drive ticks via BatchQueue.tick()/drain() or a
-        running background loop). Raises RuntimeError if the serving tick's
-        dispatch failed."""
+        running background loop). Raises ``DeadlineExceeded`` if the QoS
+        router shed the request, RuntimeError if the serving tick's dispatch
+        failed."""
         if not self._event.wait(timeout):
             raise TimeoutError(
                 "queued request not served yet — call BatchQueue.tick()/"
                 "drain(), or start() the background tick loop")
         if self._error is not None:
+            if isinstance(self._error, DeadlineExceeded):
+                raise self._error
             raise RuntimeError(
                 f"queued request failed in its serving tick: {self._error!r}"
             ) from self._error
@@ -102,15 +131,42 @@ class QueryTicket:
 
 
 class BatchQueue:
-    """Dynamic micro-batching request queue in front of ``SearchEngine``.
+    """Dynamic micro-batching request queue in front of ``SearchEngine``,
+    with a QoS-aware tick packer.
 
-    Requests (arbitrary per-caller batch sizes) are packed FIFO into ticks
-    of at most ``max_batch`` rows, padded + masked up to the smallest rung
-    of the compiled batch-shape ``ladder``, and served by ONE masked
-    fused-plan dispatch per tick (`SearchEngine.make_plan_fn(masked=True)`,
-    the typed seam built for this layer). Padding rows are provably inert
-    (core.query mask contract), so the scattered-back per-request results
-    are bit-exact with direct per-request dispatch.
+    Requests (arbitrary per-caller batch sizes) are packed into ticks of at
+    most ``max_batch`` rows, padded + masked up to the smallest rung of the
+    compiled batch-shape ``ladder``, and served by ONE masked plan dispatch
+    per tick (`SearchEngine.make_plan_fn(masked=True)`, the typed seam
+    built for this layer). Padding rows are provably inert (core.query mask
+    contract), so the scattered-back per-request results are bit-exact with
+    direct per-request dispatch.
+
+    **Pack order (QoS).** ``submit(..., priority=, deadline_ms=)`` attaches
+    a priority class (0 = highest, strict across classes) and an optional
+    deadline; within a class, segments pack earliest-deadline-first (EDF;
+    deadline-less segments last, FIFO by submission order — so all-default
+    traffic reduces exactly to the original FIFO packer). Packing stops at
+    the first segment that does not fit (head-of-line: nothing behind the
+    head jumps the line; oversize requests spill to later ticks unchanged).
+
+    **Load shedding.** A segment whose deadline has already expired at pack
+    time is shed: its ticket fails fast with :class:`DeadlineExceeded`
+    (sibling segments of the ticket drop with it) instead of occupying tick
+    rows. Shed counts ride on ``TickStats.shed`` / ``stats_summary()``.
+
+    **Adaptive ladder.** With ``adaptive_ladder=True`` the packer keeps a
+    windowed occupancy histogram from the tick log and stops packing at the
+    preferred rung (the smallest ladder shape covering the window's p90
+    rows) instead of always filling toward ``max_batch`` — unless a waiting
+    segment's deadline slack is inside ~2 tick periods, in which case the
+    packer fills for it (latency beats shape reuse).
+
+    **Cache warming.** With ``warm_cache_rows=N`` over an external engine,
+    the plan's probe-trace row histogram is collected and the background
+    loop prefetches the N hottest block rows into the store cache (each
+    shard's own clock arena under ``plan="sharded_external"``) whenever the
+    queue goes idle — advisory, never counted in the logical read ledger.
 
     The ladder is warmed up at construction: every rung's program is
     compiled once, and steady-state ticks can never retrace (asserted by
@@ -144,23 +200,35 @@ class BatchQueue:
     def __init__(self, index, *, plan: Optional[str] = None, k: int = 1,
                  ladder: Sequence[int] = (8, 32, 128),
                  max_batch: Optional[int] = None, tick_us: float = 200.0,
-                 warmup: bool = True, **plan_kw):
+                 warmup: bool = True, adaptive_ladder: bool = False,
+                 window: int = 64, warm_cache_rows: int = 0, **plan_kw):
         self.engine: SearchEngine = (
             index if isinstance(index, SearchEngine) else SearchEngine(index))
         self.ladder: tuple = self.resolve_ladder(ladder, max_batch)
         self.max_batch: int = self.ladder[-1]
         self.tick_us = float(tick_us)
+        self.adaptive_ladder = bool(adaptive_ladder)
+        self.window = int(window)
+        self.warm_cache_rows = int(warm_cache_rows)
         self.plan = plan or self.engine.default_plan
         self.cfg, self._fn = self.engine.make_plan_fn(
             plan=self.plan, k=k, masked=True, **plan_kw)
         self._d = int(self.engine.params.d)
-        self._pending: deque = deque()   # (ticket, seg_idx, rows [b, d])
-        self._lock = threading.Lock()        # guards _pending
+        self._pending: deque = deque()   # _Pending segments awaiting a tick
+        self._lock = threading.Lock()        # guards _pending / _seq
         self._serve_lock = threading.Lock()  # serializes whole ticks
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        self._seq = 0                    # submission counter (FIFO tiebreak)
+        self._qos_pending = 0            # pending segments with QoS attrs
         self.dispatch_count = 0          # the one-dispatch-per-tick probe
         self.tick_log: list = []         # TickStats per tick
+        self.qos_log: list = []          # one dict per deadline/priority ticket
+        self.shed_count = 0              # tickets shed with DeadlineExceeded
+        self._warmed_at = -1             # dispatch_count at last cache warm
+        ext = getattr(self.engine, "_external", None)
+        if self.warm_cache_rows > 0 and ext is not None:
+            ext.collect_row_hist = True  # feed warm_cache() the probe trace
         if warmup:
             self.warmup()
 
@@ -184,9 +252,15 @@ class BatchQueue:
         raise ValueError(f"{rows} rows exceed max_batch={self.max_batch}")
 
     # -- request side -------------------------------------------------------
-    def submit(self, queries) -> QueryTicket:
+    def submit(self, queries, *, priority: int = 0,
+               deadline_ms: Optional[float] = None) -> QueryTicket:
         """Enqueue one request ([b, d] or [d]); returns its ticket. Requests
-        wider than max_batch are segmented; the tail spills to later ticks."""
+        wider than max_batch are segmented; the tail spills to later ticks.
+
+        ``priority`` (0 = highest) ranks strictly across classes in the tick
+        packer; ``deadline_ms`` is a relative budget from now — segments
+        still unserved when it expires are shed with ``DeadlineExceeded``
+        instead of dispatched. A ticket's segments share one deadline."""
         q = np.asarray(queries, dtype=np.float32)
         if q.ndim == 1:
             q = q[None, :]
@@ -194,12 +268,24 @@ class BatchQueue:
             raise ValueError(f"expected [b, {self._d}] queries, got {q.shape}")
         if q.shape[0] == 0:
             raise ValueError("empty request")
+        if priority < 0:
+            raise ValueError(f"priority must be >= 0, got {priority}")
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be positive, got {deadline_ms}")
+        now = time.monotonic()
+        deadline = None if deadline_ms is None else now + deadline_ms * 1e-3
         segs = [q[i:i + self.max_batch]
                 for i in range(0, q.shape[0], self.max_batch)]
-        ticket = QueryTicket(len(segs))
+        ticket = QueryTicket(len(segs), priority=priority, deadline=deadline,
+                             submit_t=now)
         with self._lock:
             for i, s in enumerate(segs):
-                self._pending.append((ticket, i, s))
+                self._pending.append(_Pending(
+                    ticket=ticket, seg_idx=i, seg=s, priority=int(priority),
+                    deadline=deadline, seq=self._seq))
+                self._seq += 1
+            if priority != 0 or deadline is not None:
+                self._qos_pending += len(segs)
         return ticket
 
     def query(self, queries, *, timeout: float = 600.0) -> QueryResult:
@@ -210,28 +296,113 @@ class BatchQueue:
         return ticket.result(timeout=timeout)
 
     # -- tick side ----------------------------------------------------------
+    def _record_qos(self, ticket: QueryTicket, *, now: float,
+                    shed: bool) -> None:
+        """One QoS record per ticket, at resolution (served or shed)."""
+        if ticket._qos_logged:
+            return
+        ticket._qos_logged = True
+        deadline_ms = (None if ticket.deadline is None
+                       else (ticket.deadline - ticket.submit_t) * 1e3)
+        hit = (not shed) and (ticket.deadline is None
+                              or now <= ticket.deadline)
+        self.qos_log.append(dict(
+            priority=ticket.priority,
+            latency_ms=(now - ticket.submit_t) * 1e3,
+            deadline_ms=deadline_ms, hit=bool(hit), shed=bool(shed)))
+
+    def _target_rows(self) -> int:
+        """Adaptive ladder: smallest rung covering the window's p90 rows —
+        the packer's soft fill target (max_batch stays the hard cap)."""
+        if not self.adaptive_ladder or not self.tick_log:
+            return self.max_batch
+        recent = [t.rows for t in self.tick_log[-self.window:]]
+        p90 = float(np.percentile(recent, 90))
+        for s in self.ladder:
+            if s >= p90:
+                return s
+        return self.max_batch
+
     def tick(self) -> Optional[TickStats]:
-        """Serve one tick: pack FIFO segments up to max_batch rows, pad +
-        mask to the smallest ladder rung, dispatch ONCE, scatter back.
-        Returns None (no dispatch) when the queue is empty. Thread-safe:
-        whole ticks are serialized (concurrent callers — e.g. several
-        synchronous query() drains — each serve complete ticks, never
-        interleave one)."""
+        """Serve one tick: shed expired segments, pack the live ones in QoS
+        order (strict priority, EDF within class, FIFO tiebreak) up to
+        max_batch rows, pad + mask to the smallest ladder rung, dispatch
+        ONCE, scatter back. Returns None (no dispatch) when nothing packed.
+        Thread-safe: whole ticks are serialized (concurrent callers — e.g.
+        several synchronous query() drains — each serve complete ticks,
+        never interleave one)."""
         with self._serve_lock:
+            now = time.monotonic()
+            urgent_s = 2.0 * self.tick_us * 1e-6   # slack beating shape reuse
             with self._lock:
-                batch = []
-                rows = 0
-                while self._pending:
-                    nrows = self._pending[0][2].shape[0]
-                    if rows + nrows > self.max_batch:
-                        break   # keep FIFO: the head spills to the next tick
-                    batch.append(self._pending.popleft())
-                    rows += nrows
+                shed_tickets: dict = {}
+                target = self._target_rows()
+                batch, rows = [], 0
+                if self._qos_pending == 0:
+                    # fast path — no priorities, no deadlines pending: the
+                    # deque IS the pack order (seq), so the original O(batch)
+                    # FIFO popleft packer applies; the backlog is never
+                    # scanned or sorted (this is the high-arrival serving
+                    # regime the queued-vs-direct bench measures)
+                    while self._pending:
+                        e = self._pending[0]
+                        if e.ticket.done():   # an earlier tick failed it
+                            self._pending.popleft()
+                            continue
+                        nrows = e.seg.shape[0]
+                        if rows + nrows > self.max_batch:
+                            break   # head-of-line: the head spills
+                        if batch and rows + nrows > target:
+                            break   # adaptive soft stop (nothing is urgent)
+                        batch.append(self._pending.popleft())
+                        rows += nrows
+                else:
+                    live = []
+                    for e in self._pending:
+                        if e.ticket.done():   # sibling shed / tick failure
+                            continue
+                        if e.deadline is not None and e.deadline <= now:
+                            shed_tickets[id(e.ticket)] = e.ticket
+                            continue
+                        live.append(e)
+                    live.sort(key=lambda e: (
+                        e.priority,
+                        e.deadline if e.deadline is not None else float("inf"),
+                        e.seq))
+                    spilled = []
+                    for i, e in enumerate(live):
+                        nrows = e.seg.shape[0]
+                        if rows + nrows > self.max_batch:
+                            # strict head-of-line: nothing behind the first
+                            # non-fitting segment jumps the line
+                            spilled = live[i:]
+                            break
+                        if (batch and rows + nrows > target
+                                and not (e.deadline is not None
+                                         and e.deadline - now < urgent_s)):
+                            spilled = live[i:]
+                            break   # adaptive soft stop at the preferred rung
+                        batch.append(e)
+                        rows += nrows
+                    # unpacked segments return in submission order so the
+                    # next tick's sort sees the same FIFO tiebreak
+                    self._pending = deque(sorted(spilled, key=lambda e: e.seq))
+                    self._qos_pending = sum(
+                        1 for e in self._pending
+                        if e.priority != 0 or e.deadline is not None)
+            n_shed = len(shed_tickets)
+            for t in shed_tickets.values():
+                self.shed_count += 1
+                budget_ms = (t.deadline - t.submit_t) * 1e3
+                t._fail(DeadlineExceeded(
+                    f"request shed: {budget_ms:.1f}ms deadline expired "
+                    f"{(now - t.deadline) * 1e3:.1f}ms before its tick"))
+                self._record_qos(t, now=now, shed=True)
             if not batch:
                 return None
             shape = self.shape_for(rows)
             qs = np.zeros((shape, self._d), dtype=np.float32)
-            qs[:rows] = np.concatenate([seg for _, _, seg in batch], axis=0)
+            qs[:rows] = np.concatenate([e.seg for e in batch], axis=0)
             valid = np.zeros((shape,), dtype=bool)
             valid[:rows] = True
             t0 = time.perf_counter()
@@ -242,8 +413,8 @@ class BatchQueue:
                 # the popped segments can never be re-served at this point:
                 # fail their tickets (waiters raise instead of hanging) and
                 # surface the error to whoever drove the tick
-                for ticket, _, _ in batch:
-                    ticket._fail(e)
+                for p in batch:
+                    p.ticket._fail(e)
                 raise
             dispatch_ms = (time.perf_counter() - t0) * 1e3
             self.dispatch_count += 1
@@ -251,15 +422,19 @@ class BatchQueue:
             # scatter is then numpy views (per-segment device slicing costs
             # more than the dispatch itself at high request counts)
             host = jax.device_get(res)
+            done_t = time.monotonic()
             lo = 0
-            for ticket, seg_idx, seg in batch:
-                hi = lo + seg.shape[0]
-                ticket._deliver(seg_idx, host.slice_rows(lo, hi))
+            for p in batch:
+                hi = lo + p.seg.shape[0]
+                p.ticket._deliver(p.seg_idx, host.slice_rows(lo, hi))
                 lo = hi
+                if p.ticket.done():
+                    self._record_qos(p.ticket, now=done_t, shed=False)
             stats = TickStats(
                 tick=len(self.tick_log), shape=shape, rows=rows,
                 segments=len(batch), pad_rows=shape - rows,
                 occupancy=rows / shape, dispatch_ms=dispatch_ms,
+                shed=n_shed,
             )
             self.tick_log.append(stats)
             return stats
@@ -275,7 +450,21 @@ class BatchQueue:
     def depth(self) -> int:
         """Pending rows not yet served."""
         with self._lock:
-            return sum(seg.shape[0] for _, _, seg in self._pending)
+            return sum(e.seg.shape[0] for e in self._pending)
+
+    # -- cache warming ------------------------------------------------------
+    def warm_cache(self, top: Optional[int] = None) -> int:
+        """Prefetch the hottest probe-trace rows into the external store's
+        cache (per-shard arenas under a striped store). Advisory: prefetches
+        ride the ledger's ``prefetch_reads`` lane, never logical ``reads``.
+        Returns rows warmed (0 when not an external engine / no trace)."""
+        ext = getattr(self.engine, "_external", None)
+        if ext is None:
+            return 0
+        n = top if top is not None else self.warm_cache_rows
+        if n <= 0:
+            return 0
+        return ext.warm_cache(top=n)
 
     # -- background loop ----------------------------------------------------
     def start(self) -> "BatchQueue":
@@ -295,6 +484,13 @@ class BatchQueue:
                     # silently with requests still flowing in
                     st = None
                 if st is None or st.rows < self.max_batch:
+                    if (st is None and self.warm_cache_rows > 0
+                            and self.dispatch_count != self._warmed_at):
+                        # idle: re-warm the store cache from the probe trace
+                        # (once per dispatch generation — the histogram only
+                        # changes when ticks actually ran)
+                        self._warmed_at = self.dispatch_count
+                        self.warm_cache()
                     self._stop.wait(self.tick_us * 1e-6)
 
         self._thread = threading.Thread(
@@ -318,12 +514,26 @@ class BatchQueue:
         self.stop()
 
     # -- observability ------------------------------------------------------
-    def stats_summary(self) -> dict:
-        """Aggregate tick stats: occupancy, pad waste, dispatch p50/p99.
-        When the engine serves an external index (plan="external"), the
-        block store's cumulative I/O ledger (reads / hits / hit rate) rides
-        along as ``external_store``."""
+    def stats_summary(self, window: Optional[int] = None) -> dict:
+        """Aggregate tick stats: occupancy, pad waste, dispatch p50/p99,
+        the ladder-rung histogram, and the QoS block (shed counts +
+        deadline hit rates, overall and per priority class).
+
+        ``window=N`` restricts the tick aggregates to the last N ticks (the
+        sliding view the adaptive packer sees); the default is cumulative.
+        The QoS block and dispatch/shed counters are always cumulative —
+        they describe tickets, which have no tick alignment.
+
+        When the engine serves an external index, the block store's
+        cumulative I/O ledger rides along as ``external_store``, tagged
+        with the resolved backend (and the fallback that produced it — the
+        serve-startup provenance line), plus per-shard ledgers when the
+        store is striped."""
+        if window is not None and window <= 0:
+            raise ValueError(f"window must be positive, got {window}")
         log = list(self.tick_log)
+        if window is not None:
+            log = log[-window:]
         if not log:
             out = dict(ticks=0, dispatches=self.dispatch_count,
                        rows_served=0)
@@ -331,6 +541,9 @@ class BatchQueue:
             dms = np.asarray([t.dispatch_ms for t in log])
             slots = sum(t.shape for t in log)
             rows = sum(t.rows for t in log)
+            rung_hist = {int(s): 0 for s in self.ladder}
+            for t in log:
+                rung_hist[int(t.shape)] = rung_hist.get(int(t.shape), 0) + 1
             out = dict(
                 ticks=len(log),
                 dispatches=self.dispatch_count,
@@ -340,10 +553,46 @@ class BatchQueue:
                 pad_waste=float((slots - rows) / slots),
                 p50_dispatch_ms=float(np.percentile(dms, 50)),
                 p99_dispatch_ms=float(np.percentile(dms, 99)),
+                rung_hist=rung_hist,
             )
+        out["qos"] = self._qos_summary()
         ext = getattr(self.engine, "_external", None)
         if ext is not None:
-            out["external_store"] = ext.store.stats.as_dict()
+            store = ext.store
+            es = store.stats.as_dict()
+            es["backend"] = store.name
+            es["fallback_from"] = getattr(store, "fallback_from", None)
+            es["fallback_reason"] = getattr(store, "fallback_reason", None)
+            shards = getattr(store, "num_shards", None)
+            if shards is not None:
+                es["num_shards"] = int(shards)
+                es["per_shard"] = [s.as_dict()
+                                   for s in store.per_shard_stats()]
+            out["external_store"] = es
+        return out
+
+    def _qos_summary(self) -> dict:
+        """Cumulative QoS roll-up. Hit rates are computed over
+        deadline-bearing tickets only (a deadline-less ticket can't miss)."""
+        qlog = list(self.qos_log)
+        tracked = [r for r in qlog if r["deadline_ms"] is not None]
+        out = dict(shed=self.shed_count, tickets=len(qlog),
+                   tracked=len(tracked))
+        if tracked:
+            out["deadline_hit_rate"] = float(
+                np.mean([r["hit"] for r in tracked]))
+        by_class: dict = {}
+        for pri in sorted({r["priority"] for r in qlog}):
+            rows = [r for r in qlog if r["priority"] == pri]
+            trk = [r for r in rows if r["deadline_ms"] is not None]
+            cls = dict(tickets=len(rows), tracked=len(trk),
+                       shed=sum(1 for r in rows if r["shed"]),
+                       p99_latency_ms=float(np.percentile(
+                           [r["latency_ms"] for r in rows], 99)))
+            if trk:
+                cls["hit_rate"] = float(np.mean([r["hit"] for r in trk]))
+            by_class[int(pri)] = cls
+        out["by_class"] = by_class
         return out
 
 

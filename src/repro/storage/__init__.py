@@ -23,10 +23,15 @@ from .blockstore import (AioBlockStore, BACKENDS, BlockStore,
                          store_backend_env)
 from .external import (ExternalIndex, ExternalPlanStats, RungStats,
                        external_plan)
-from .format import (DIRECT_ALIGN_MIN, FORMAT_VERSION, MAGIC, PAGE_SIZE,
-                     SpillHeader, StorageFormatError, aligned_extent,
-                     load_arrays, load_external, read_header, spill_index,
+from .format import (DIRECT_ALIGN_MIN, FORMAT_VERSION, MAGIC,
+                     MANIFEST_MAGIC, MANIFEST_NAME, MANIFEST_VERSION,
+                     PAGE_SIZE, SpillHeader, StorageFormatError,
+                     aligned_extent, load_arrays, load_arrays_sharded,
+                     load_external, load_external_sharded, read_header,
+                     read_manifest, spill_index, spill_index_sharded,
                      verify_file)
+from .sharded import (ShardedExternalIndex, ShardedExternalPlanStats,
+                      StripedBlockStore, sharded_external_plan)
 from .measure import (DEFAULT_MODEL_CONFIG, HEAVY_SPEC, SWEEP_QDS,
                       drop_page_cache, heavy_bucket_workload,
                       measure_backends, page_cache_residency, qd_sweep)
@@ -38,9 +43,14 @@ __all__ = [
     "MemBlockStore", "MmapBlockStore", "STORE_BACKEND_ENV", "StoreStats",
     "make_store", "store_backend_env",
     "ExternalIndex", "ExternalPlanStats", "RungStats", "external_plan",
-    "DIRECT_ALIGN_MIN", "FORMAT_VERSION", "MAGIC", "PAGE_SIZE",
+    "ShardedExternalIndex", "ShardedExternalPlanStats", "StripedBlockStore",
+    "sharded_external_plan",
+    "DIRECT_ALIGN_MIN", "FORMAT_VERSION", "MAGIC", "MANIFEST_MAGIC",
+    "MANIFEST_NAME", "MANIFEST_VERSION", "PAGE_SIZE",
     "SpillHeader", "StorageFormatError", "aligned_extent", "load_arrays",
-    "load_external", "read_header", "spill_index", "verify_file",
+    "load_arrays_sharded", "load_external", "load_external_sharded",
+    "read_header", "read_manifest", "spill_index", "spill_index_sharded",
+    "verify_file",
     "DEFAULT_MODEL_CONFIG", "HEAVY_SPEC", "SWEEP_QDS", "drop_page_cache",
     "heavy_bucket_workload", "measure_backends", "page_cache_residency",
     "qd_sweep",

@@ -81,10 +81,44 @@ class ExternalIndex:
     # behavior); deeper values keep an async backend's queue full across
     # the rung boundary — worth raising with `uring` on a real device.
     prefetch_depth: int = 1
+    # probe-trace row histogram (block row -> times walked), accumulated by
+    # external_plan when enabled — the serving queue's cache-warming signal
+    collect_row_hist: bool = False
+    row_hist: Optional[dict] = None
 
     @property
     def backend(self) -> str:
         return self.store.name
+
+    def record_probe_rows(self, rows) -> None:
+        """Fold one chain step's block rows into the probe-trace histogram."""
+        if self.row_hist is None:
+            self.row_hist = {}
+        h = self.row_hist
+        uniq, counts = np.unique(np.asarray(rows, np.int64).ravel(),
+                                 return_counts=True)
+        for g, c in zip(uniq.tolist(), counts.tolist()):
+            h[g] = h.get(g, 0) + c
+
+    def hot_rows(self, top: Optional[int] = None) -> np.ndarray:
+        """The most-walked block rows, hottest first (empty until a plan ran
+        with ``collect_row_hist``)."""
+        if not self.row_hist:
+            return np.zeros((0,), dtype=np.int64)
+        rows = sorted(self.row_hist, key=self.row_hist.get, reverse=True)
+        if top is not None:
+            rows = rows[:int(top)]
+        return np.asarray(rows, dtype=np.int64)
+
+    def warm_cache(self, top: Optional[int] = 1024) -> int:
+        """Prefetch the hottest probe-trace rows into the store's cache
+        arena (each shard's own arena when the store is striped). Advisory:
+        prefetch never touches the logical ``reads`` ledger. Returns the
+        number of rows pushed."""
+        rows = self.hot_rows(top)
+        if rows.size:
+            self.store.prefetch(rows)
+        return int(rows.size)
 
     def close(self) -> None:
         self.store.close()
@@ -221,7 +255,7 @@ def _append_candidates_np(buf_id, count, flat_id, flat_ok, S):
 
 
 def _walk_rung_host(store: BlockStore, cnt, head, qfp, active_q,
-                    cfg: QueryConfig, blkp: int, sbuf: int):
+                    cfg: QueryConfig, blkp: int, sbuf: int, record=None):
     """One rung's chain walk. Fetches are batched per chain step (every
     still-active bucket's step-j row in ONE read_rows call — the deep queue
     the aio backend fans out), gated by the S budget exactly like the
@@ -240,7 +274,10 @@ def _walk_rung_host(store: BlockStore, cnt, head, qfp, active_q,
         if not active.any():
             break
         qi, li = np.nonzero(active)
-        ids_rows, fps_rows = store.read_rows(head[qi, li] + step)
+        step_rows = head[qi, li] + step
+        if record is not None:
+            record(step_rows)
+        ids_rows, fps_rows = store.read_rows(step_rows)
         blocks_read += active.sum(axis=1, dtype=np.int32)
         # fingerprint filter (padding slots hold fp=-1 / id=INVALID, so the
         # match test alone reproduces bucket_probe's semantics), scattered
@@ -299,7 +336,8 @@ def external_plan(ext: ExternalIndex, queries, cfg: QueryConfig,
         t0 = time.perf_counter()
         buf_id, count, blocks_read, nonempty = _walk_rung_host(
             ext.store, cnt_np[t], head_np[t], qfp_np[t], active_q, cfg,
-            ext.blkp, sbuf)
+            ext.blkp, sbuf,
+            record=ext.record_probe_rows if ext.collect_row_hist else None)
         t1 = time.perf_counter()
         probe_sizes_t = (jnp.asarray(np.where(nonempty, cnt_np[t], -1)
                                      .astype(np.int32))

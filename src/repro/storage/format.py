@@ -50,11 +50,19 @@ import numpy as np
 
 __all__ = ["StorageFormatError", "SpillHeader", "spill_index", "read_header",
            "load_arrays", "load_external", "verify_file", "aligned_extent",
-           "MAGIC", "FORMAT_VERSION", "PAGE_SIZE", "DIRECT_ALIGN_MIN"]
+           "spill_index_sharded", "read_manifest", "load_arrays_sharded",
+           "load_external_sharded",
+           "MAGIC", "FORMAT_VERSION", "PAGE_SIZE", "DIRECT_ALIGN_MIN",
+           "MANIFEST_NAME", "MANIFEST_MAGIC", "MANIFEST_VERSION"]
 
 MAGIC = b"E2LSHSPL"
 FORMAT_VERSION = 1
 PAGE_SIZE = 4096
+# sharded spill directory (paper Sec. 7: one index, blocks striped over
+# drives): MANIFEST.json + resident.e2l + one block-stripe file per shard
+MANIFEST_NAME = "MANIFEST.json"
+MANIFEST_MAGIC = "E2LSHSHD"
+MANIFEST_VERSION = 1
 # O_DIRECT read granularity floor. ALIGNMENT GUARANTEES of the format:
 # every section (blocks included) starts on a PAGE_SIZE boundary and the
 # file is truncated to a page boundary, so for any block row g the aligned
@@ -123,6 +131,16 @@ def aligned_extent(offset: int, nbytes: int, align: int = DIRECT_ALIGN_MIN):
     return astart, alen, int(offset) - astart
 
 
+def _stack_blocks(arrays) -> np.ndarray:
+    """The interleaved ``[NB, 2, BLKp]`` int32 block store of an
+    ``IndexArrays`` (row g = ids row then fps row — one paper block read)."""
+    ids_b = np.ascontiguousarray(np.asarray(arrays.ids_blocks, np.int32))
+    fps_b = np.ascontiguousarray(np.asarray(arrays.fps_blocks, np.int32))
+    if ids_b.shape != fps_b.shape or ids_b.ndim != 2:
+        raise ValueError(f"malformed block store: {ids_b.shape} vs {fps_b.shape}")
+    return np.ascontiguousarray(np.stack([ids_b, fps_b], axis=1))
+
+
 def spill_index(path, arrays, *, params=None, stats=None,
                 page_size: int = PAGE_SIZE) -> SpillHeader:
     """Write ``arrays`` (an ``IndexArrays``) to ``path`` in the spill format.
@@ -131,17 +149,26 @@ def spill_index(path, arrays, *, params=None, stats=None,
     to be served (``load_external`` needs it to build a ``SearchEngine``
     config); ``E2LSHIndex.spill`` passes it automatically.
     """
-    path = pathlib.Path(path)
-    path.parent.mkdir(parents=True, exist_ok=True)
-    ids_b = np.ascontiguousarray(np.asarray(arrays.ids_blocks, np.int32))
-    fps_b = np.ascontiguousarray(np.asarray(arrays.fps_blocks, np.int32))
-    if ids_b.shape != fps_b.shape or ids_b.ndim != 2:
-        raise ValueError(f"malformed block store: {ids_b.shape} vs {fps_b.shape}")
-    blocks = np.ascontiguousarray(np.stack([ids_b, fps_b], axis=1))  # [NB, 2, BLKp]
-
+    blocks = _stack_blocks(arrays)
     payload = {"blocks": blocks}
     for name in _RESIDENT_FIELDS:
         payload[name] = np.ascontiguousarray(np.asarray(getattr(arrays, name)))
+    return _write_spill(
+        path, payload, block_objs=int(arrays.block_objs),
+        lane_pad=int(arrays.lane_pad), blkp=int(blocks.shape[2]),
+        nb=int(blocks.shape[0]), params=params, stats=stats,
+        page_size=page_size)
+
+
+def _write_spill(path, payload: dict, *, block_objs: int, lane_pad: int,
+                 blkp: int, nb: int, params=None, stats=None,
+                 page_size: int = PAGE_SIZE) -> SpillHeader:
+    """The one spill-file writer: magic + versioned crc-guarded header +
+    page-aligned crc'd sections. ``spill_index`` passes the full payload
+    (blocks + every resident field); the sharded spill uses it per file
+    (resident-only, or one block stripe per shard)."""
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
 
     # lay sections out page-aligned after a (generous) header page budget;
     # offsets feed the header, so compute the header size with a fixed-point
@@ -149,10 +176,10 @@ def spill_index(path, arrays, *, params=None, stats=None,
     def header_json(sections: dict) -> bytes:
         meta = dict(
             page_size=page_size,
-            block_objs=int(arrays.block_objs),
-            lane_pad=int(arrays.lane_pad),
-            blkp=int(blocks.shape[2]),
-            nb=int(blocks.shape[0]),
+            block_objs=int(block_objs),
+            lane_pad=int(lane_pad),
+            blkp=int(blkp),
+            nb=int(nb),
             sections=sections,
             params=_params_dict(params),
             stats=dict(stats.__dict__) if stats is not None else None,
@@ -329,4 +356,214 @@ def load_external(path, *, backend: str = "aio", qd: int = 16,
         block_objs=hdr.block_objs, lane_pad=hdr.lane_pad, blkp=hdr.blkp,
         store=store, path=str(path), stats=stats,
         prefetch_depth=int(prefetch_depth),
+    )
+
+
+# --------------------------------------------------------------------------
+# Sharded spill: ONE global index, block store striped over per-shard files
+# (the paper's multi-drive layout, Sec. 7 / Fig. 15 — hash tables resident,
+# blocks distributed over drives). Stripe policy: round-robin by block row,
+# global row g lives in shard g % num_shards at local row g // num_shards.
+# --------------------------------------------------------------------------
+
+def spill_index_sharded(path, arrays, num_shards: int, *, params=None,
+                        stats=None, page_size: int = PAGE_SIZE) -> dict:
+    """Write ``arrays`` as a sharded spill DIRECTORY at ``path``:
+
+    * ``resident.e2l`` — every resident section (hash family, tables, CSR
+      view, DRAM tier) in the spill-file format, no block store;
+    * ``shard-NNN.e2l`` — one spill-file per shard holding that shard's
+      round-robin block stripe as its ``blocks`` section;
+    * ``MANIFEST.json`` — versioned, crc-guarded manifest tying them
+      together (stripe policy, global row count, per-shard file table).
+
+    Every file keeps the single-file format's guarantees (magic, versioned
+    crc-guarded header, page-aligned crc'd sections), so shard files serve
+    any ``BlockStore`` backend unchanged. Returns the manifest payload.
+    """
+    path = pathlib.Path(path)
+    sh = int(num_shards)
+    if sh < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    blocks = _stack_blocks(arrays)
+    nb = int(blocks.shape[0])
+    if sh > nb:
+        raise ValueError(
+            f"cannot stripe {nb} block rows over {sh} shards (at most one "
+            "shard per block row)")
+    path.mkdir(parents=True, exist_ok=True)
+    resident = {name: np.ascontiguousarray(np.asarray(getattr(arrays, name)))
+                for name in _RESIDENT_FIELDS}
+    common = dict(block_objs=int(arrays.block_objs),
+                  lane_pad=int(arrays.lane_pad), blkp=int(blocks.shape[2]),
+                  page_size=page_size)
+    _write_spill(path / "resident.e2l", resident, nb=nb, params=params,
+                 stats=stats, **common)
+    shards = []
+    for s in range(sh):
+        stripe = np.ascontiguousarray(blocks[s::sh])
+        fname = f"shard-{s:03d}.e2l"
+        _write_spill(path / fname, {"blocks": stripe},
+                     nb=int(stripe.shape[0]), **common)
+        shards.append(dict(file=fname, nb=int(stripe.shape[0])))
+    payload = dict(
+        num_shards=sh,
+        stripe=dict(policy="round_robin", chunk_rows=1),
+        nb_global=nb, blkp=int(blocks.shape[2]),
+        block_objs=int(arrays.block_objs), lane_pad=int(arrays.lane_pad),
+        resident="resident.e2l", shards=shards,
+    )
+    body = json.dumps(payload, sort_keys=True).encode("utf-8")
+    manifest = dict(magic=MANIFEST_MAGIC, version=MANIFEST_VERSION,
+                    crc32=int(zlib.crc32(body) & 0xFFFFFFFF), payload=payload)
+    (path / MANIFEST_NAME).write_text(
+        json.dumps(manifest, sort_keys=True, indent=1))
+    return payload
+
+
+def read_manifest(path) -> dict:
+    """Parse and verify a sharded spill's ``MANIFEST.json`` (magic, version,
+    payload crc); returns the manifest payload. ``path`` is the spill
+    directory (or the manifest file itself)."""
+    path = pathlib.Path(path)
+    man_path = path / MANIFEST_NAME if path.is_dir() else path
+    try:
+        man = json.loads(man_path.read_text())
+    except FileNotFoundError:
+        raise StorageFormatError(
+            f"{path}: not a sharded spill (no {MANIFEST_NAME}; single-file "
+            "spills open with load_external)") from None
+    except (OSError, json.JSONDecodeError) as e:
+        raise StorageFormatError(
+            f"{man_path}: unreadable sharded-spill manifest ({e})") from None
+    if man.get("magic") != MANIFEST_MAGIC:
+        raise StorageFormatError(
+            f"{man_path}: not a sharded spill manifest "
+            f"(magic {man.get('magic')!r}, expected {MANIFEST_MAGIC!r})")
+    if int(man.get("version", -1)) != MANIFEST_VERSION:
+        raise StorageFormatError(
+            f"{man_path}: unsupported manifest version {man.get('version')} "
+            f"(this build reads version {MANIFEST_VERSION}; re-spill the "
+            "index with spill_index_sharded)")
+    payload = man.get("payload")
+    body = json.dumps(payload, sort_keys=True).encode("utf-8")
+    if (zlib.crc32(body) & 0xFFFFFFFF) != int(man.get("crc32", -1)):
+        raise StorageFormatError(
+            f"{man_path}: corrupted manifest (crc mismatch) — the manifest "
+            "was edited or damaged; re-spill the index")
+    return payload
+
+
+def _shard_headers(path: pathlib.Path, man: dict) -> list:
+    """Open + cross-check every shard file against the manifest."""
+    headers = []
+    for s, entry in enumerate(man["shards"]):
+        sp = path / entry["file"]
+        try:
+            shdr = read_header(sp)
+        except FileNotFoundError:
+            raise StorageFormatError(
+                f"{path}: shard file {entry['file']!r} is missing — the "
+                "sharded spill is incomplete; re-spill the index") from None
+        if shdr.nb != int(entry["nb"]) or shdr.blkp != int(man["blkp"]):
+            raise StorageFormatError(
+                f"{sp}: shard {s} disagrees with the manifest "
+                f"(nb {shdr.nb} vs {entry['nb']}, blkp {shdr.blkp} vs "
+                f"{man['blkp']}) — mixed spill generations; re-spill")
+        headers.append(shdr)
+    return headers
+
+
+def load_arrays_sharded(path):
+    """Materialize the full ``IndexArrays`` from a sharded spill directory
+    (every section crc-verified, stripes re-interleaved) — the bit-for-bit
+    round-trip counterpart of ``spill_index_sharded``."""
+    import jax.numpy as jnp
+
+    from ..core.index import IndexArrays
+
+    path = pathlib.Path(path)
+    man = read_manifest(path)
+    rhdr = read_header(path / man["resident"])
+    resident = {name: _read_section(path / man["resident"], rhdr, name)
+                for name in _RESIDENT_FIELDS}
+    sh = int(man["num_shards"])
+    blocks = np.empty((int(man["nb_global"]), 2, int(man["blkp"])),
+                      dtype=np.int32)
+    for s, shdr in enumerate(_shard_headers(path, man)):
+        blocks[s::sh] = _read_section(path / man["shards"][s]["file"],
+                                      shdr, "blocks")
+    return IndexArrays(
+        ids_blocks=jnp.asarray(blocks[:, 0]),
+        fps_blocks=jnp.asarray(blocks[:, 1]),
+        **{name: jnp.asarray(arr) for name, arr in resident.items()},
+        block_objs=rhdr.block_objs, lane_pad=rhdr.lane_pad,
+    )
+
+
+def load_external_sharded(path, *, backend: str = "aio", qd: int = 16,
+                          cache_rows: Optional[int] = None,
+                          direct: bool = True, strict: bool = False,
+                          prefetch_depth: int = 1):
+    """Open a sharded spill directory for external-memory querying under
+    ``plan="sharded_external"``.
+
+    Resident sections load from ``resident.e2l``; each shard's block stripe
+    stays on disk behind its OWN :class:`~repro.storage.blockstore.BlockStore`
+    (same ``backend``/``qd``/``direct``/``strict`` semantics as
+    ``load_external``, ``REPRO_STORE_BACKEND`` honored per store), striped
+    back together by a :class:`~repro.storage.sharded.StripedBlockStore` —
+    per-shard caches and ledgers, one rolled-up measured-N_io view.
+    ``cache_rows`` is the TOTAL cache budget, divided evenly over shards.
+    Returns a :class:`~repro.storage.sharded.ShardedExternalIndex`.
+    """
+    import jax.numpy as jnp
+
+    from ..core.probabilities import LSHParams
+    from .blockstore import make_store
+    from .sharded import ShardedExternalIndex, StripedBlockStore
+
+    path = pathlib.Path(path)
+    man = read_manifest(path)
+    rhdr = read_header(path / man["resident"])
+    if rhdr.params is None:
+        raise StorageFormatError(
+            f"{path}: spilled without LSHParams — re-spill via "
+            "ShardedIndexArrays.spill or spill_index_sharded(..., params=...)")
+    pdict = dict(rhdr.params)
+    pdict["radii"] = tuple(pdict["radii"])
+    params = LSHParams(**pdict)
+    resident = {name: _read_section(path / man["resident"], rhdr, name)
+                for name in _EXTERNAL_FIELDS}
+    sh = int(man["num_shards"])
+    per_cache = (None if cache_rows is None
+                 else max(1, -(-int(cache_rows) // sh)))
+    stores = []
+    try:
+        for s, shdr in enumerate(_shard_headers(path, man)):
+            stores.append(make_store(
+                backend, path / man["shards"][s]["file"], shdr, qd=qd,
+                cache_rows=per_cache, direct=direct, strict=strict))
+    except Exception:
+        for st in stores:
+            st.close()
+        raise
+    store = StripedBlockStore(stores, nb=int(man["nb_global"]),
+                              blkp=int(man["blkp"]))
+    stats = None
+    if rhdr.stats is not None:
+        from ..core.index import IndexStats
+        stats = IndexStats(**rhdr.stats)
+    return ShardedExternalIndex(
+        params=params,
+        a=jnp.asarray(resident["a"]), b=jnp.asarray(resident["b"]),
+        rm=jnp.asarray(resident["rm"]),
+        blocks_head=jnp.asarray(resident["blocks_head"]),
+        table_cnt=jnp.asarray(resident["table_cnt"]),
+        db=jnp.asarray(resident["db"]),
+        db_norm2=jnp.asarray(resident["db_norm2"]),
+        block_objs=rhdr.block_objs, lane_pad=rhdr.lane_pad, blkp=rhdr.blkp,
+        store=store, path=str(path), stats=stats,
+        prefetch_depth=int(prefetch_depth),
+        num_shards=sh, manifest=man,
     )

@@ -1,0 +1,375 @@
+"""The sharded external-memory tier: per-shard spill + manifest, the
+striped block store, and the plan="sharded_external" parity + roll-up
+contract.
+
+Design (docs/storage.md): ``spill_index_sharded`` stripes ONE global
+index's block file round-robin across per-shard spill files (global row g
+lives in shard ``g % SH`` at local row ``g // SH`` — the paper's
+multi-drive layout) under a crc-guarded, versioned MANIFEST.json.
+Candidate selection is the unmodified global external plan, so
+``plan="sharded_external"`` must be bit-exact with ``plan="fused"`` on
+every ``QueryResult`` field, and every logical block read lands on exactly
+one shard — the per-shard ledgers must roll up to the global measured N_io
+EXACTLY, which is what keeps the Eq. 6/7 tie-out valid per drive.
+"""
+import json
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import E2LSHoS, SearchEngine
+from repro.core.index import IndexArrays
+from repro.kernels.dispatch import force_pallas_env
+from repro import storage as st
+
+_EXACT_FIELDS = ("ids", "found", "radii_searched", "nio_table", "nio_blocks",
+                 "cands_checked")
+
+
+def _require_uring(path) -> None:
+    caps = st.capabilities(path)
+    if not caps["uring_store"]:
+        pytest.skip(f"io_uring unavailable: {caps['io_uring_reason']}")
+
+
+def _assert_matches(ref, out, *, probe_sizes=False):
+    for name in _EXACT_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, name)), np.asarray(getattr(out, name)),
+            err_msg=f"sharded_external diverged from fused on {name}")
+    if force_pallas_env():   # interpret-lane float contract (kernel lane)
+        np.testing.assert_allclose(np.asarray(ref.dists),
+                                   np.asarray(out.dists),
+                                   rtol=1e-4, atol=1e-5)
+    else:
+        np.testing.assert_array_equal(np.asarray(ref.dists),
+                                      np.asarray(out.dists))
+    if probe_sizes:
+        np.testing.assert_array_equal(np.asarray(ref.probe_sizes),
+                                      np.asarray(out.probe_sizes))
+
+
+# Same sizing as test_storage_external's lane-friendly index: this file is
+# part of `make qos-lane`, which runs under the forced interpret kernels.
+@pytest.fixture(scope="module")
+def storage_index():
+    rng = np.random.default_rng(19)
+    n, d = 1500, 12
+    centers = rng.normal(size=(24, d)).astype(np.float32)
+    db = (centers[rng.integers(0, 24, n)]
+          + 0.18 * rng.normal(size=(n, d))).astype(np.float32)
+    qs = (db[rng.choice(n, 24, replace=False)]
+          + 0.05 * rng.normal(size=(24, d))).astype(np.float32)
+    s = float(np.median(np.linalg.norm(db - db.mean(0), axis=1))) / 3
+    return E2LSHoS.build(db / s, gamma=0.7, s_scale=2.0, max_L=8,
+                         seed=3), qs / s
+
+
+@pytest.fixture(scope="module")
+def hard_queries(storage_index):
+    _, qs = storage_index
+    q = qs[:15]
+    far = np.full((1, q.shape[1]), 40.0, dtype=np.float32)
+    return np.concatenate([q, far])
+
+
+@pytest.fixture(scope="module")
+def sharded_spills(storage_index, tmp_path_factory):
+    """One sharded spill directory per shard count under test."""
+    idx, _ = storage_index
+    root = tmp_path_factory.mktemp("sharded_spills")
+    out = {}
+    for sh in (1, 2, 3, 4):
+        p = root / f"sh{sh}"
+        st.spill_index_sharded(p, idx.index.arrays, sh, params=idx.params,
+                               stats=idx.index.stats)
+        out[sh] = p
+    return out
+
+
+@pytest.fixture(scope="module")
+def fused_ref(storage_index, hard_queries):
+    return SearchEngine(storage_index[0]).query(
+        hard_queries, plan="fused", k=3, collect_probe_sizes=True)
+
+
+# --------------------------------------------------------------------------
+# Sharded spill format + manifest
+# --------------------------------------------------------------------------
+
+def test_sharded_spill_roundtrip_bit_exact(storage_index, sharded_spills):
+    """Every IndexArrays leaf survives spill_index_sharded ->
+    load_arrays_sharded bit-for-bit: the round-robin stripes re-interleave
+    to exactly the single-file layout."""
+    idx, _ = storage_index
+    for sh, path in sharded_spills.items():
+        loaded = st.load_arrays_sharded(path)
+        for name in IndexArrays.array_fields():
+            np.testing.assert_array_equal(
+                np.asarray(getattr(loaded, name)),
+                np.asarray(getattr(idx.index.arrays, name)),
+                err_msg=f"leaf {name} changed across {sh}-shard round-trip")
+        assert loaded.block_objs == idx.index.arrays.block_objs
+        assert loaded.lane_pad == idx.index.arrays.lane_pad
+
+
+def test_manifest_shape_and_stripe_balance(storage_index, sharded_spills):
+    """The manifest records the stripe policy and a per-shard file table
+    whose row counts are the balanced round-robin split (max spread 1 row,
+    summing exactly to the global block count) — including when the row
+    count does not divide evenly (3 shards over a non-multiple)."""
+    idx, _ = storage_index
+    nb = int(idx.index.arrays.ids_blocks.shape[0])
+    for sh, path in sharded_spills.items():
+        man = st.read_manifest(path)
+        assert man["num_shards"] == sh
+        assert man["stripe"] == {"policy": "round_robin", "chunk_rows": 1}
+        assert man["nb_global"] == nb
+        nbs = [e["nb"] for e in man["shards"]]
+        assert sum(nbs) == nb
+        assert max(nbs) - min(nbs) <= 1
+        assert (path / man["resident"]).exists()
+        for e in man["shards"]:
+            # each stripe is a well-formed spill file in its own right
+            shdr = st.read_header(path / e["file"])
+            assert shdr.nb == e["nb"]
+
+
+def _rewrite_manifest(path, mutate):
+    man = json.loads((path / st.MANIFEST_NAME).read_text())
+    mutate(man)
+    (path / st.MANIFEST_NAME).write_text(json.dumps(man))
+
+
+def test_manifest_rejects_corruption(sharded_spills, tmp_path):
+    """Tampered payload (crc), future version, and wrong magic all fail
+    loudly; a directory without a manifest points at load_external."""
+    src = sharded_spills[2]
+
+    bad = tmp_path / "crc"
+    shutil.copytree(src, bad)
+    _rewrite_manifest(bad, lambda m: m["payload"].update(num_shards=3))
+    with pytest.raises(st.StorageFormatError, match="crc"):
+        st.read_manifest(bad)
+
+    bad = tmp_path / "version"
+    shutil.copytree(src, bad)
+    _rewrite_manifest(bad, lambda m: m.update(version=99))
+    with pytest.raises(st.StorageFormatError, match="version"):
+        st.read_manifest(bad)
+
+    bad = tmp_path / "magic"
+    shutil.copytree(src, bad)
+    _rewrite_manifest(bad, lambda m: m.update(magic="NOTSHARD"))
+    with pytest.raises(st.StorageFormatError, match="magic"):
+        st.read_manifest(bad)
+
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    with pytest.raises(st.StorageFormatError, match="load_external"):
+        st.read_manifest(empty)
+
+
+def test_missing_shard_file_rejected(sharded_spills, tmp_path):
+    bad = tmp_path / "missing"
+    shutil.copytree(sharded_spills[2], bad)
+    (bad / "shard-001.e2l").unlink()
+    with pytest.raises(st.StorageFormatError, match="missing"):
+        st.load_arrays_sharded(bad)
+    with pytest.raises(st.StorageFormatError, match="missing"):
+        st.load_external_sharded(bad)
+
+
+def test_mixed_generation_shard_rejected(storage_index, sharded_spills,
+                                         tmp_path):
+    """A shard file swapped in from a different spill generation (wrong row
+    count for its manifest slot) is detected by the cross-check."""
+    bad = tmp_path / "mixed"
+    shutil.copytree(sharded_spills[3], bad)
+    # 4-shard stripe files have a different nb than the 3-shard manifest slot
+    shutil.copy(sharded_spills[4] / "shard-000.e2l", bad / "shard-000.e2l")
+    with pytest.raises(st.StorageFormatError, match="re-spill"):
+        st.load_arrays_sharded(bad)
+
+
+# --------------------------------------------------------------------------
+# plan="sharded_external" parity + the per-shard N_io roll-up
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_shards", (1, 2, 4))
+@pytest.mark.parametrize("backend", ("mem", "aio"))
+def test_sharded_external_matches_fused(storage_index, sharded_spills,
+                                        hard_queries, fused_ref, backend,
+                                        num_shards):
+    """The acceptance contract: sharded_external == fused on every field
+    (probe trace included) at 1/2/4 shards, and the per-shard ledgers sum
+    EXACTLY to the global measured N_io."""
+    with st.load_external_sharded(sharded_spills[num_shards],
+                                  backend=backend, qd=8) as ext:
+        engine = SearchEngine(ext)
+        assert engine.plans == ("sharded_external",)
+        assert engine.default_plan == "sharded_external"
+        out = engine.query(hard_queries, k=3, collect_probe_sizes=True)
+        _assert_matches(fused_ref, out, probe_sizes=True)
+        ps = engine.last_external_stats
+        assert isinstance(ps, st.ShardedExternalPlanStats)
+        assert ps.num_shards == num_shards
+        assert len(ps.per_shard) == num_shards
+        assert ps.measured_nio_blocks == ps.nio_blocks_counted
+        # every logical read lands on exactly one shard: the roll-up is
+        # exact, not approximate
+        assert sum(s.reads for s in ps.per_shard) == ps.io.reads
+        assert sum(s.device_reads for s in ps.per_shard) == ps.io.device_reads
+        assert sum(s.cache_hits for s in ps.per_shard) == ps.io.cache_hits
+
+
+def test_sharded_external_mmap_backend(sharded_spills, hard_queries,
+                                       fused_ref):
+    with st.load_external_sharded(sharded_spills[2], backend="mmap") as ext:
+        out = SearchEngine(ext).query(hard_queries, k=3,
+                                      collect_probe_sizes=True)
+        _assert_matches(fused_ref, out, probe_sizes=True)
+
+
+def test_sharded_external_uneven_shards(storage_index, sharded_spills,
+                                        hard_queries, fused_ref):
+    """A shard count that does not divide the row count: stripes are
+    genuinely uneven (asserted) and parity still holds."""
+    idx, _ = storage_index
+    nb = int(idx.index.arrays.ids_blocks.shape[0])
+    uneven = next(s for s in (3, 4) if nb % s != 0)
+    with st.load_external_sharded(sharded_spills[uneven], backend="aio",
+                                  qd=4) as ext:
+        nbs = sorted(s.nb for s in ext.store.shards)
+        assert nbs[0] != nbs[-1]
+        out = SearchEngine(ext).query(hard_queries, k=3,
+                                      collect_probe_sizes=True)
+        _assert_matches(fused_ref, out, probe_sizes=True)
+
+
+def test_sharded_external_tiny_per_shard_cache(storage_index, sharded_spills,
+                                               hard_queries):
+    """A total cache budget smaller than the shard count still divides into
+    working per-shard caches and never costs correctness."""
+    ref = SearchEngine(storage_index[0]).query(hard_queries, plan="fused",
+                                               k=1)
+    with st.load_external_sharded(sharded_spills[2], backend="aio", qd=2,
+                                  cache_rows=4) as ext:
+        out = SearchEngine(ext).query(hard_queries, k=1)
+        _assert_matches(ref, out)
+
+
+def test_sharded_external_masked_rows_inert(storage_index, sharded_spills):
+    """The serving mask contract holds across shard stripes: masked rows
+    fetch no blocks and leave real rows bit-identical."""
+    idx, qs = storage_index
+    q = qs[:9]
+    pad = np.concatenate([q, np.full((7, q.shape[1]), 1e6, np.float32)])
+    valid = np.arange(16) < 9
+    ref = SearchEngine(idx).query(q, plan="fused", k=2)
+    with st.load_external_sharded(sharded_spills[2], backend="aio",
+                                  qd=4) as ext:
+        out = SearchEngine(ext).query(pad, k=2, valid=valid)
+        _assert_matches(ref, out.slice_rows(0, 9))
+        tail = out.slice_rows(9, 16)
+        assert (np.asarray(tail.ids) == np.int32(2**31 - 1)).all()
+        assert not np.asarray(tail.found).any()
+        assert (np.asarray(tail.nio) == 0).all()
+
+
+def test_sharded_measured_nio_matches_replay(storage_index, sharded_spills,
+                                             hard_queries):
+    """The Eq. 6/7 tie-out through the striped store: the io_count replay of
+    the probe trace == runtime counters == the rolled-up per-shard read
+    ledgers, exactly (mirrors test_io_count's single-store contract)."""
+    from repro.core.io_count import nio_for_block_size
+
+    idx, _ = storage_index
+    p = idx.params
+    with st.load_external_sharded(sharded_spills[2], backend="aio",
+                                  qd=8) as ext:
+        engine = SearchEngine(ext)
+        res = engine.query(hard_queries, k=1, collect_probe_sizes=True)
+        ps = engine.last_external_stats
+    replay = nio_for_block_size(np.asarray(res.probe_sizes), s_cap=p.S,
+                                block_bytes=p.block_bytes)
+    np.testing.assert_array_equal(replay, np.asarray(res.nio))
+    blocks_replayed = int(replay.sum()) - int(np.asarray(res.nio_table).sum())
+    assert ps.measured_nio_blocks == blocks_replayed
+    assert ps.measured_nio_blocks == int(np.asarray(res.nio_blocks).sum())
+    assert ps.io.reads == ps.measured_nio_blocks
+    # the per-drive decomposition of the SAME ledger
+    assert sum(s.reads for s in ps.per_shard) == ps.io.reads
+
+
+def test_sharded_external_uring_backend(sharded_spills, hard_queries,
+                                        fused_ref):
+    """The real io_uring engine under the striped store (skips where the
+    capability probe says production would fall back)."""
+    path = sharded_spills[2]
+    _require_uring(str(path / "shard-000.e2l"))
+    with st.load_external_sharded(path, backend="uring", qd=8) as ext:
+        assert ext.store.name == "uring"
+        out = SearchEngine(ext).query(hard_queries, k=3,
+                                      collect_probe_sizes=True)
+        _assert_matches(fused_ref, out, probe_sizes=True)
+
+
+def test_striped_store_reassembles_request_order(storage_index,
+                                                 sharded_spills):
+    """read_rows through the striped store returns rows in REQUEST order
+    (not shard order), duplicates included, matching the flat block file."""
+    idx, _ = storage_index
+    blocks_ids = np.asarray(idx.index.arrays.ids_blocks)
+    blocks_fps = np.asarray(idx.index.arrays.fps_blocks)
+    nb = blocks_ids.shape[0]
+    rng = np.random.default_rng(5)
+    rows = rng.integers(0, nb, size=64)
+    rows[10] = rows[11]                      # duplicate across one shard
+    with st.load_external_sharded(sharded_spills[4], backend="mem") as ext:
+        ids, fps = ext.store.read_rows(rows)
+        np.testing.assert_array_equal(ids, blocks_ids[rows])
+        np.testing.assert_array_equal(fps, blocks_fps[rows])
+        assert ext.store.stats.reads == rows.size
+        assert sum(s.reads for s in ext.store.per_shard_stats()) == rows.size
+
+
+# --------------------------------------------------------------------------
+# ShardedIndexArrays.spill: the distributed build's storage hand-off
+# --------------------------------------------------------------------------
+
+def test_sharded_index_arrays_spill_and_serve(tmp_path):
+    """build_sharded_index -> .spill() -> load_external_sharded serves the
+    merged GLOBAL index, bit-exact with a direct single build under the
+    same hash family (range partition + shared family => identical CSR)."""
+    from repro.core import build_index
+    from repro.core.distributed import build_sharded_index
+    from repro.core.hashing import HashFamily
+
+    rng = np.random.default_rng(23)
+    n, d = 900, 10
+    db = rng.normal(size=(n, d)).astype(np.float32)
+    sh = build_sharded_index(db, 3, gamma=0.7, s_scale=2.0, max_L=4, seed=2)
+
+    # to_global() == the direct build, leaf for leaf
+    fam = HashFamily(a=sh.arrays.a, b=sh.arrays.b, rm=sh.arrays.rm,
+                     w=sh.params.w, u=sh.params.u,
+                     fp_bits=sh.params.fp_bits)
+    direct = build_index(db, sh.params, family=fam)
+    glob = sh.to_global()
+    for name in IndexArrays.array_fields():
+        np.testing.assert_array_equal(
+            np.asarray(getattr(glob, name)),
+            np.asarray(getattr(direct.arrays, name)),
+            err_msg=f"to_global leaf {name} diverged from the direct build")
+
+    path = tmp_path / "dist_spill"
+    man = sh.spill(path)
+    assert man["num_shards"] == 3
+    qs = db[:8] * 1.01
+    ref = SearchEngine(direct).query(qs, plan="fused", k=2)
+    with st.load_external_sharded(path, backend="aio", qd=4) as ext:
+        assert ext.num_shards == 3
+        out = SearchEngine(ext).query(qs, k=2)
+        _assert_matches(ref, out)
