@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: verify test bench-query bench-smoke deprecation-lane kernel-lane \
-	storage-lane uring-lane qos-lane deps
+	storage-lane uring-lane qos-lane telemetry-lane deps
 
 deps:
 	$(PY) -m pip install -r requirements.txt
@@ -68,6 +68,15 @@ storage-lane:
 qos-lane:
 	REPRO_FORCE_PALLAS=interpret $(PY) -m pytest \
 	tests/test_sharded_external.py tests/test_serving_qos.py -q
+
+# telemetry lane: the unified observability layer (docs/telemetry.md) —
+# registry exactness under threads, tracer semantics, exporters, the live
+# /metrics server, the stats_summary-vs-reset race regression, and the
+# trace-vs-ledger consistency tie-out (span-derived read counts must equal
+# StoreStats.reads AND the io_count replay on every backend) under the
+# forced interpret kernel path so the real plan programs run off-TPU.
+telemetry-lane:
+	REPRO_FORCE_PALLAS=interpret $(PY) -m pytest tests/test_telemetry.py -q
 
 # async-engine lane: force EVERY make_store call onto the uring backend
 # (REPRO_STORE_BACKEND — the storage twin of REPRO_FORCE_PALLAS) and run

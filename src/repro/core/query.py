@@ -71,6 +71,7 @@ The seed's free-function surface (`query_batch*`, `ensure_fused_arrays`,
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Optional
 
@@ -85,8 +86,13 @@ from ..kernels.bucket_probe.ops import bucket_probe
 from ..kernels.dispatch import on_tpu
 from ..kernels.l2_distance.ops import l2_distance_gathered
 from ..kernels.lsh_hash.ops import lsh_hash_all_radii
+from ..telemetry import get_registry, get_tracer
 
 __all__ = ["QueryConfig", "QueryResult", "SearchEngine"]
+
+_QUERY_CALLS = get_registry().counter(
+    "e2lsh_query_calls_total", "SearchEngine.query calls",
+    labelnames=("plan",))
 
 _INVALID = np.int32(2**31 - 1)
 
@@ -652,10 +658,27 @@ class SearchEngine:
         return "sharded" if self._sharded is not None else "fused"
 
     @property
+    def external(self):
+        """The engine's ``ExternalIndex`` (None for in-memory engines) —
+        the typed handle to the storage tier's observability surfaces:
+        ``.last_plan_stats`` (the most recent plan call's instrumentation),
+        ``.plan_totals`` (the accumulating roll-up the queued serving path
+        needs — last_plan_stats is overwritten per tick), and ``.store``
+        (the live I/O ledger)."""
+        return self._external
+
+    @property
     def last_external_stats(self):
-        """Instrumentation of the most recent plan="external" call (measured
-        N_io, cache hit rate, per-rung fetch/compute overlap) — None for
-        in-memory engines."""
+        """Deprecated (one-PR window, telemetry PR): use
+        ``engine.external.last_plan_stats`` — or ``.plan_totals`` /
+        ``telemetry.snapshot()`` when accumulating across queued ticks,
+        which this overwritten-per-call surface silently cannot do."""
+        warnings.warn(
+            "SearchEngine.last_external_stats is deprecated: use "
+            "engine.external.last_plan_stats (per-call), "
+            "engine.external.plan_totals (accumulating), or "
+            "repro.telemetry.snapshot() (unified metrics)",
+            DeprecationWarning, stacklevel=2)
         return (self._external.last_plan_stats
                 if self._external is not None else None)
 
@@ -719,6 +742,24 @@ class SearchEngine:
         dispatch.
         """
         plan = plan or self.default_plan
+        _QUERY_CALLS.inc(plan=plan)
+        tr = get_tracer()
+        if not tr.enabled:
+            return self._query_impl(
+                queries, plan=plan, k=k, s_cap=s_cap, block_objs=block_objs,
+                collect_probe_sizes=collect_probe_sizes,
+                s_cap_per_shard=s_cap_per_shard, valid=valid)
+        with tr.span("query", plan=plan, k=k):
+            return self._query_impl(
+                queries, plan=plan, k=k, s_cap=s_cap, block_objs=block_objs,
+                collect_probe_sizes=collect_probe_sizes,
+                s_cap_per_shard=s_cap_per_shard, valid=valid)
+
+    def _query_impl(self, queries, *, plan: str, k: int,
+                    s_cap: Optional[int], block_objs: Optional[int],
+                    collect_probe_sizes: bool,
+                    s_cap_per_shard: Optional[int],
+                    valid) -> QueryResult:
         queries = jnp.asarray(queries)
         if valid is not None:
             valid = jnp.asarray(valid, dtype=bool)

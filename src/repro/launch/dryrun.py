@@ -413,7 +413,7 @@ def run_external_store_cell(*, store: str = "aio", qd: int = 16,
                 ts = time.time()
                 res = engine.query(qs / s, k=k)   # warm pass: steady state
                 rec["warm_seconds"] = round(time.time() - ts, 3)
-                ps = engine.last_external_stats
+                ps = engine.external.last_plan_stats
                 rec["io"] = dict(
                     measured_nio_blocks=ps.measured_nio_blocks,
                     counters_agree=bool(

@@ -36,6 +36,7 @@ from ..core.distributed import build_sharded_index
 from ..data import make_dataset
 from ..models import Model
 from ..serving import BatchQueue, DeadlineExceeded, ServeEngine
+from .. import telemetry
 
 
 def _ragged_requests(queries: np.ndarray, *, max_batch: int, seed: int):
@@ -181,7 +182,7 @@ def serve_ann_external(args, ds):
         t0 = time.perf_counter()
         res = fn(ds.queries)
         dt = time.perf_counter() - t0
-        ps = engine.last_external_stats
+        ps = engine.external.last_plan_stats
         ratio = overall_ratio(np.asarray(res.dists), ds.gt_dists[:, :args.k])
         print(f"[external/{args.store}] ratio={ratio:.4f} "
               f"nio/query={float(np.mean(np.asarray(res.nio))):.0f} "
@@ -334,11 +335,35 @@ def main(argv=None):
     ap.add_argument("--retrieval", action="store_true")
     ap.add_argument("--dstore", type=int, default=5000)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-port", dest="metrics_port", type=int,
+                    default=None,
+                    help="expose live telemetry over HTTP while serving: "
+                         "/metrics (Prometheus text), /trace?last=N "
+                         "(Perfetto-loadable chrome trace of the last N "
+                         "spans), /snapshot (raw JSON). 0 picks an "
+                         "ephemeral port (printed at startup)")
+    ap.add_argument("--trace-sampling", dest="trace_sampling", type=float,
+                    default=1.0,
+                    help="span-tracing sample rate when --metrics-port is "
+                         "up (per query tree; 0 disables tracing but keeps "
+                         "/metrics live)")
     args = ap.parse_args(argv)
-    if args.mode == "ann":
-        serve_ann(args)
-    else:
-        serve_lm(args)
+    server = None
+    if args.metrics_port is not None:
+        if args.trace_sampling > 0:
+            telemetry.enable(sampling=args.trace_sampling)
+        server = telemetry.MetricsServer(args.metrics_port).start()
+        print(f"[telemetry] live at {server.url}/metrics "
+              f"(+ /trace?last=N, /snapshot; "
+              f"trace sampling {args.trace_sampling:g})")
+    try:
+        if args.mode == "ann":
+            serve_ann(args)
+        else:
+            serve_lm(args)
+    finally:
+        if server is not None:
+            server.stop()
 
 
 if __name__ == "__main__":

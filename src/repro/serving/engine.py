@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+import weakref
 from collections import deque
 from typing import Any, Callable, Optional, Sequence
 
@@ -30,6 +31,7 @@ import numpy as np
 
 from ..core.query import QueryResult, SearchEngine
 from ..models.model import Model
+from ..telemetry import get_registry, get_tracer
 
 __all__ = ["BatchQueue", "DeadlineExceeded", "QueryTicket", "TickStats",
            "ServeEngine", "GenerationResult"]
@@ -221,12 +223,19 @@ class BatchQueue:
         self._stop = threading.Event()
         self._seq = 0                    # submission counter (FIFO tiebreak)
         self._qos_pending = 0            # pending segments with QoS attrs
+        # one lock owns every stats surface below: tick commits
+        # (dispatch_count + tick_log row land atomically), QoS records,
+        # stats_summary() reads, and reset_stats() — the window-vs-reset
+        # race fix (a summary can never see a cleared log with a stale
+        # dispatch count, or iterate tick_log mid-clear)
+        self._stats_lock = threading.Lock()
         self.dispatch_count = 0          # the one-dispatch-per-tick probe
         self.tick_log: list = []         # TickStats per tick
         self.qos_log: list = []          # one dict per deadline/priority ticket
         self.shed_count = 0              # tickets shed with DeadlineExceeded
         self._warmed_at = -1             # dispatch_count at last cache warm
-        ext = getattr(self.engine, "_external", None)
+        _LIVE_QUEUES.add(self)           # telemetry collector (module foot)
+        ext = self.engine.external
         if self.warm_cache_rows > 0 and ext is not None:
             ext.collect_row_hist = True  # feed warm_cache() the probe trace
         if warmup:
@@ -306,17 +315,21 @@ class BatchQueue:
                        else (ticket.deadline - ticket.submit_t) * 1e3)
         hit = (not shed) and (ticket.deadline is None
                               or now <= ticket.deadline)
-        self.qos_log.append(dict(
-            priority=ticket.priority,
-            latency_ms=(now - ticket.submit_t) * 1e3,
-            deadline_ms=deadline_ms, hit=bool(hit), shed=bool(shed)))
+        with self._stats_lock:
+            self.qos_log.append(dict(
+                priority=ticket.priority,
+                latency_ms=(now - ticket.submit_t) * 1e3,
+                deadline_ms=deadline_ms, hit=bool(hit), shed=bool(shed)))
 
     def _target_rows(self) -> int:
         """Adaptive ladder: smallest rung covering the window's p90 rows —
         the packer's soft fill target (max_batch stays the hard cap)."""
-        if not self.adaptive_ladder or not self.tick_log:
+        if not self.adaptive_ladder:
             return self.max_batch
-        recent = [t.rows for t in self.tick_log[-self.window:]]
+        with self._stats_lock:           # _lock -> _stats_lock (fixed order)
+            recent = [t.rows for t in self.tick_log[-self.window:]]
+        if not recent:
+            return self.max_batch
         p90 = float(np.percentile(recent, 90))
         for s in self.ladder:
             if s >= p90:
@@ -332,95 +345,116 @@ class BatchQueue:
         several synchronous query() drains — each serve complete ticks,
         never interleave one)."""
         with self._serve_lock:
-            now = time.monotonic()
-            urgent_s = 2.0 * self.tick_us * 1e-6   # slack beating shape reuse
-            with self._lock:
-                shed_tickets: dict = {}
-                target = self._target_rows()
-                batch, rows = [], 0
-                if self._qos_pending == 0:
-                    # fast path — no priorities, no deadlines pending: the
-                    # deque IS the pack order (seq), so the original O(batch)
-                    # FIFO popleft packer applies; the backlog is never
-                    # scanned or sorted (this is the high-arrival serving
-                    # regime the queued-vs-direct bench measures)
-                    while self._pending:
-                        e = self._pending[0]
-                        if e.ticket.done():   # an earlier tick failed it
-                            self._pending.popleft()
-                            continue
-                        nrows = e.seg.shape[0]
-                        if rows + nrows > self.max_batch:
-                            break   # head-of-line: the head spills
-                        if batch and rows + nrows > target:
-                            break   # adaptive soft stop (nothing is urgent)
-                        batch.append(self._pending.popleft())
-                        rows += nrows
-                else:
-                    live = []
-                    for e in self._pending:
-                        if e.ticket.done():   # sibling shed / tick failure
-                            continue
-                        if e.deadline is not None and e.deadline <= now:
-                            shed_tickets[id(e.ticket)] = e.ticket
-                            continue
-                        live.append(e)
-                    live.sort(key=lambda e: (
-                        e.priority,
-                        e.deadline if e.deadline is not None else float("inf"),
-                        e.seq))
-                    spilled = []
-                    for i, e in enumerate(live):
-                        nrows = e.seg.shape[0]
-                        if rows + nrows > self.max_batch:
-                            # strict head-of-line: nothing behind the first
-                            # non-fitting segment jumps the line
-                            spilled = live[i:]
-                            break
-                        if (batch and rows + nrows > target
-                                and not (e.deadline is not None
-                                         and e.deadline - now < urgent_s)):
-                            spilled = live[i:]
-                            break   # adaptive soft stop at the preferred rung
-                        batch.append(e)
-                        rows += nrows
-                    # unpacked segments return in submission order so the
-                    # next tick's sort sees the same FIFO tiebreak
-                    self._pending = deque(sorted(spilled, key=lambda e: e.seq))
-                    self._qos_pending = sum(
-                        1 for e in self._pending
-                        if e.priority != 0 or e.deadline is not None)
-            n_shed = len(shed_tickets)
-            for t in shed_tickets.values():
-                self.shed_count += 1
-                budget_ms = (t.deadline - t.submit_t) * 1e3
-                t._fail(DeadlineExceeded(
-                    f"request shed: {budget_ms:.1f}ms deadline expired "
-                    f"{(now - t.deadline) * 1e3:.1f}ms before its tick"))
-                self._record_qos(t, now=now, shed=True)
-            if not batch:
-                return None
-            shape = self.shape_for(rows)
-            qs = np.zeros((shape, self._d), dtype=np.float32)
-            qs[:rows] = np.concatenate([e.seg for e in batch], axis=0)
-            valid = np.zeros((shape,), dtype=bool)
-            valid[:rows] = True
-            t0 = time.perf_counter()
+            tr = get_tracer()
+            root = tr.begin("serve.tick", plan=self.plan)
             try:
+                return self._tick_locked(tr, root)
+            finally:
+                root.end()
+
+    def _tick_locked(self, tr, root) -> Optional[TickStats]:
+        """The tick body, under ``_serve_lock`` with its root span open."""
+        now = time.monotonic()
+        urgent_s = 2.0 * self.tick_us * 1e-6   # slack beating shape reuse
+        psp = tr.begin("tick.pack")
+        with self._lock:
+            shed_tickets: dict = {}
+            target = self._target_rows()
+            batch, rows = [], 0
+            if self._qos_pending == 0:
+                # fast path — no priorities, no deadlines pending: the
+                # deque IS the pack order (seq), so the original O(batch)
+                # FIFO popleft packer applies; the backlog is never
+                # scanned or sorted (this is the high-arrival serving
+                # regime the queued-vs-direct bench measures)
+                while self._pending:
+                    e = self._pending[0]
+                    if e.ticket.done():   # an earlier tick failed it
+                        self._pending.popleft()
+                        continue
+                    nrows = e.seg.shape[0]
+                    if rows + nrows > self.max_batch:
+                        break   # head-of-line: the head spills
+                    if batch and rows + nrows > target:
+                        break   # adaptive soft stop (nothing is urgent)
+                    batch.append(self._pending.popleft())
+                    rows += nrows
+            else:
+                live = []
+                for e in self._pending:
+                    if e.ticket.done():   # sibling shed / tick failure
+                        continue
+                    if e.deadline is not None and e.deadline <= now:
+                        shed_tickets[id(e.ticket)] = e.ticket
+                        continue
+                    live.append(e)
+                live.sort(key=lambda e: (
+                    e.priority,
+                    e.deadline if e.deadline is not None else float("inf"),
+                    e.seq))
+                spilled = []
+                for i, e in enumerate(live):
+                    nrows = e.seg.shape[0]
+                    if rows + nrows > self.max_batch:
+                        # strict head-of-line: nothing behind the first
+                        # non-fitting segment jumps the line
+                        spilled = live[i:]
+                        break
+                    if (batch and rows + nrows > target
+                            and not (e.deadline is not None
+                                     and e.deadline - now < urgent_s)):
+                        spilled = live[i:]
+                        break   # adaptive soft stop at the preferred rung
+                    batch.append(e)
+                    rows += nrows
+                # unpacked segments return in submission order so the
+                # next tick's sort sees the same FIFO tiebreak
+                self._pending = deque(sorted(spilled, key=lambda e: e.seq))
+                self._qos_pending = sum(
+                    1 for e in self._pending
+                    if e.priority != 0 or e.deadline is not None)
+        n_shed = len(shed_tickets)
+        if not batch and not n_shed:
+            psp.cancel()          # idle poll: keep the span ring quiet
+        else:
+            psp.set(segments=len(batch), rows=rows, shed=n_shed)
+            psp.end()
+        for t in shed_tickets.values():
+            with self._stats_lock:
+                self.shed_count += 1
+            budget_ms = (t.deadline - t.submit_t) * 1e3
+            t._fail(DeadlineExceeded(
+                f"request shed: {budget_ms:.1f}ms deadline expired "
+                f"{(now - t.deadline) * 1e3:.1f}ms before its tick"))
+            self._record_qos(t, now=now, shed=True)
+        if not batch:
+            if not n_shed:
+                root.cancel()     # nothing happened; drop the empty tick
+            return None
+        shape = self.shape_for(rows)
+        qs = np.zeros((shape, self._d), dtype=np.float32)
+        qs[:rows] = np.concatenate([e.seg for e in batch], axis=0)
+        valid = np.zeros((shape,), dtype=bool)
+        valid[:rows] = True
+        t0 = time.perf_counter()
+        try:
+            with tr.span("tick.dispatch", shape=shape, rows=rows):
                 res = self._fn(jnp.asarray(qs), jnp.asarray(valid))
                 jax.block_until_ready(res.ids)
-            except Exception as e:
-                # the popped segments can never be re-served at this point:
-                # fail their tickets (waiters raise instead of hanging) and
-                # surface the error to whoever drove the tick
-                for p in batch:
-                    p.ticket._fail(e)
-                raise
-            dispatch_ms = (time.perf_counter() - t0) * 1e3
-            self.dispatch_count += 1
-            # ONE device->host transfer for the whole tick; the per-segment
-            # scatter is then numpy views (per-segment device slicing costs
-            # more than the dispatch itself at high request counts)
+        except Exception as e:
+            # the popped segments can never be re-served at this point:
+            # fail their tickets (waiters raise instead of hanging) and
+            # surface the error to whoever drove the tick
+            for p in batch:
+                p.ticket._fail(e)
+            raise
+        dispatch_ms = (time.perf_counter() - t0) * 1e3
+        _DISPATCH_MS.observe(dispatch_ms, plan=self.plan)
+        root.set(shape=shape, rows=rows, segments=len(batch))
+        # ONE device->host transfer for the whole tick; the per-segment
+        # scatter is then numpy views (per-segment device slicing costs
+        # more than the dispatch itself at high request counts)
+        with tr.span("tick.scatter", segments=len(batch)):
             host = jax.device_get(res)
             done_t = time.monotonic()
             lo = 0
@@ -430,6 +464,10 @@ class BatchQueue:
                 lo = hi
                 if p.ticket.done():
                     self._record_qos(p.ticket, now=done_t, shed=False)
+        # atomic stats commit: a concurrent stats_summary() can never
+        # see the new dispatch count without its tick row (or vice versa)
+        with self._stats_lock:
+            self.dispatch_count += 1
             stats = TickStats(
                 tick=len(self.tick_log), shape=shape, rows=rows,
                 segments=len(batch), pad_rows=shape - rows,
@@ -437,7 +475,7 @@ class BatchQueue:
                 shed=n_shed,
             )
             self.tick_log.append(stats)
-            return stats
+        return stats
 
     def drain(self) -> int:
         """Tick until the queue is empty; returns ticks run."""
@@ -458,7 +496,7 @@ class BatchQueue:
         cache (per-shard arenas under a striped store). Advisory: prefetches
         ride the ledger's ``prefetch_reads`` lane, never logical ``reads``.
         Returns rows warmed (0 when not an external engine / no trace)."""
-        ext = getattr(self.engine, "_external", None)
+        ext = self.engine.external
         if ext is None:
             return 0
         n = top if top is not None else self.warm_cache_rows
@@ -531,12 +569,19 @@ class BatchQueue:
         store is striped."""
         if window is not None and window <= 0:
             raise ValueError(f"window must be positive, got {window}")
-        log = list(self.tick_log)
+        # one consistent cut of every stats surface: tick rows, the dispatch
+        # counter, and the QoS log are copied under the same lock tick()
+        # commits under, so a concurrent reset_stats() (or a tick landing
+        # mid-summary) can never tear the view
+        with self._stats_lock:
+            log = list(self.tick_log)
+            dispatches = self.dispatch_count
+            qlog = list(self.qos_log)
+            shed = self.shed_count
         if window is not None:
             log = log[-window:]
         if not log:
-            out = dict(ticks=0, dispatches=self.dispatch_count,
-                       rows_served=0)
+            out = dict(ticks=0, dispatches=dispatches, rows_served=0)
         else:
             dms = np.asarray([t.dispatch_ms for t in log])
             slots = sum(t.shape for t in log)
@@ -546,7 +591,7 @@ class BatchQueue:
                 rung_hist[int(t.shape)] = rung_hist.get(int(t.shape), 0) + 1
             out = dict(
                 ticks=len(log),
-                dispatches=self.dispatch_count,
+                dispatches=dispatches,
                 rows_served=rows,
                 segments=sum(t.segments for t in log),
                 occupancy_mean=float(np.mean([t.occupancy for t in log])),
@@ -555,8 +600,8 @@ class BatchQueue:
                 p99_dispatch_ms=float(np.percentile(dms, 99)),
                 rung_hist=rung_hist,
             )
-        out["qos"] = self._qos_summary()
-        ext = getattr(self.engine, "_external", None)
+        out["qos"] = self._qos_summary(qlog, shed)
+        ext = self.engine.external
         if ext is not None:
             store = ext.store
             es = store.stats.as_dict()
@@ -571,13 +616,17 @@ class BatchQueue:
             out["external_store"] = es
         return out
 
-    def _qos_summary(self) -> dict:
+    def _qos_summary(self, qlog: Optional[list] = None,
+                     shed: Optional[int] = None) -> dict:
         """Cumulative QoS roll-up. Hit rates are computed over
-        deadline-bearing tickets only (a deadline-less ticket can't miss)."""
-        qlog = list(self.qos_log)
+        deadline-bearing tickets only (a deadline-less ticket can't miss).
+        Callers that already hold a consistent cut pass it in; bare calls
+        take one under the stats lock."""
+        if qlog is None:
+            with self._stats_lock:
+                qlog, shed = list(self.qos_log), self.shed_count
         tracked = [r for r in qlog if r["deadline_ms"] is not None]
-        out = dict(shed=self.shed_count, tickets=len(qlog),
-                   tracked=len(tracked))
+        out = dict(shed=shed, tickets=len(qlog), tracked=len(tracked))
         if tracked:
             out["deadline_hit_rate"] = float(
                 np.mean([r["hit"] for r in tracked]))
@@ -594,6 +643,130 @@ class BatchQueue:
             by_class[int(pri)] = cls
         out["by_class"] = by_class
         return out
+
+    def reset_stats(self) -> None:
+        """Clear the tick log, QoS log, and counters in one atomic step
+        w.r.t. concurrent ``tick()`` commits and ``stats_summary()`` readers
+        (the window-vs-reset race regression test drives all three at
+        once). The registry's process-lifetime counters are NOT touched —
+        use ``telemetry.reset()`` to re-baseline those."""
+        with self._stats_lock:
+            self.tick_log.clear()
+            self.qos_log.clear()
+            self.dispatch_count = 0
+            self.shed_count = 0
+            self._warmed_at = -1
+
+
+# -- registry collector over the live queues' ledgers -----------------------
+# TickStats / the QoS log stay the source of truth; the collector is a
+# window onto them (grouped by plan — replicas of one plan sum into one
+# series, Prometheus-style). Queues are weakly held: a gc'd queue's series
+# disappear, which the registry's baseline clamp tolerates.
+_LIVE_QUEUES: "weakref.WeakSet[BatchQueue]" = weakref.WeakSet()
+_DISPATCH_MS = get_registry().histogram(
+    "e2lsh_serve_dispatch_ms",
+    "wall time of one fused tick dispatch (ms)", labelnames=("plan",))
+
+
+def _collect_queue_metrics() -> dict:
+    cuts = []
+    for q in list(_LIVE_QUEUES):
+        depth = q.depth                       # takes q._lock; NEVER nest it
+        with q._stats_lock:                   # inside the stats lock
+            cuts.append(dict(
+                plan=q.plan, depth=depth, log=list(q.tick_log),
+                dispatches=q.dispatch_count, shed=q.shed_count,
+                qlog=list(q.qos_log)))
+    by_plan: dict = {}
+    for c in cuts:
+        by_plan.setdefault(c["plan"], []).append(c)
+
+    counters = dict(ticks=[], dispatches=[], rows=[], pad_rows=[],
+                    segments=[], shed=[])
+    gauges = dict(queue_depth=[], occupancy_mean=[], deadline_hit_rate=[])
+    rungs, cls_tickets, cls_shed, cls_hit = [], [], [], []
+    for plan, group in sorted(by_plan.items()):
+        lab = dict(plan=plan)
+        log = [t for c in group for t in c["log"]]
+        qlog = [r for c in group for r in c["qlog"]]
+        counters["ticks"].append(dict(labels=lab, value=len(log)))
+        counters["dispatches"].append(dict(
+            labels=lab, value=sum(c["dispatches"] for c in group)))
+        counters["rows"].append(dict(
+            labels=lab, value=sum(t.rows for t in log)))
+        counters["pad_rows"].append(dict(
+            labels=lab, value=sum(t.pad_rows for t in log)))
+        counters["segments"].append(dict(
+            labels=lab, value=sum(t.segments for t in log)))
+        counters["shed"].append(dict(
+            labels=lab, value=sum(c["shed"] for c in group)))
+        gauges["queue_depth"].append(dict(
+            labels=lab, value=sum(c["depth"] for c in group)))
+        if log:
+            gauges["occupancy_mean"].append(dict(
+                labels=lab,
+                value=float(np.mean([t.occupancy for t in log]))))
+        tracked = [r for r in qlog if r["deadline_ms"] is not None]
+        if tracked:
+            gauges["deadline_hit_rate"].append(dict(
+                labels=lab,
+                value=float(np.mean([r["hit"] for r in tracked]))))
+        shape_hist: dict = {}
+        for t in log:
+            shape_hist[int(t.shape)] = shape_hist.get(int(t.shape), 0) + 1
+        rungs.extend(dict(labels=dict(plan=plan, shape=str(s)), value=n)
+                     for s, n in sorted(shape_hist.items()))
+        for pri in sorted({r["priority"] for r in qlog}):
+            rows = [r for r in qlog if r["priority"] == pri]
+            trk = [r for r in rows if r["deadline_ms"] is not None]
+            plab = dict(plan=plan, priority=str(int(pri)))
+            cls_tickets.append(dict(labels=plab, value=len(rows)))
+            cls_shed.append(dict(
+                labels=plab, value=sum(1 for r in rows if r["shed"])))
+            if trk:
+                cls_hit.append(dict(
+                    labels=plab,
+                    value=float(np.mean([r["hit"] for r in trk]))))
+
+    helps = dict(
+        ticks="serving ticks dispatched",
+        dispatches="fused plan dispatches (one per tick)",
+        rows="real query rows served",
+        pad_rows="masked padding rows dispatched",
+        segments="request segments packed",
+        shed="tickets shed with DeadlineExceeded",
+    )
+    out = {f"e2lsh_serve_{k}_total": dict(type="counter", help=helps[k],
+                                          samples=v)
+           for k, v in counters.items()}
+    out["e2lsh_serve_queue_depth"] = dict(
+        type="gauge", help="pending rows not yet served",
+        samples=gauges["queue_depth"])
+    out["e2lsh_serve_occupancy_mean"] = dict(
+        type="gauge", help="mean tick occupancy (rows / shape)",
+        samples=gauges["occupancy_mean"])
+    out["e2lsh_serve_deadline_hit_rate"] = dict(
+        type="gauge",
+        help="deadline hit rate over deadline-bearing tickets",
+        samples=gauges["deadline_hit_rate"])
+    out["e2lsh_serve_rung_ticks_total"] = dict(
+        type="counter", help="ticks dispatched at each compiled batch shape",
+        samples=rungs)
+    out["e2lsh_serve_class_tickets_total"] = dict(
+        type="counter", help="resolved tickets per priority class",
+        samples=cls_tickets)
+    out["e2lsh_serve_class_shed_total"] = dict(
+        type="counter", help="shed tickets per priority class",
+        samples=cls_shed)
+    out["e2lsh_serve_class_hit_rate"] = dict(
+        type="gauge", help="deadline hit rate per priority class",
+        samples=cls_hit)
+    return out
+
+
+get_registry().register_collector(_collect_queue_metrics,
+                                  name="serving.batch_queue")
 
 
 # --------------------------------------------------------------------------

@@ -21,8 +21,8 @@ from .blockstore import (AioBlockStore, BACKENDS, BlockStore,
                          CachedBlockStore, MemBlockStore, MmapBlockStore,
                          STORE_BACKEND_ENV, StoreStats, make_store,
                          store_backend_env)
-from .external import (ExternalIndex, ExternalPlanStats, RungStats,
-                       external_plan)
+from .external import (ExternalIndex, ExternalPlanStats, ExternalPlanTotals,
+                       RungStats, external_plan)
 from .format import (DIRECT_ALIGN_MIN, FORMAT_VERSION, MAGIC,
                      MANIFEST_MAGIC, MANIFEST_NAME, MANIFEST_VERSION,
                      PAGE_SIZE, SpillHeader, StorageFormatError,
@@ -42,7 +42,8 @@ __all__ = [
     "AioBlockStore", "BACKENDS", "BlockStore", "CachedBlockStore",
     "MemBlockStore", "MmapBlockStore", "STORE_BACKEND_ENV", "StoreStats",
     "make_store", "store_backend_env",
-    "ExternalIndex", "ExternalPlanStats", "RungStats", "external_plan",
+    "ExternalIndex", "ExternalPlanStats", "ExternalPlanTotals", "RungStats",
+    "external_plan",
     "ShardedExternalIndex", "ShardedExternalPlanStats", "StripedBlockStore",
     "sharded_external_plan",
     "DIRECT_ALIGN_MIN", "FORMAT_VERSION", "MAGIC", "MANIFEST_MAGIC",

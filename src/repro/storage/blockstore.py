@@ -47,10 +47,13 @@ import dataclasses
 import mmap
 import os
 import threading
+import weakref
 from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
 
 import numpy as np
+
+from ..telemetry import get_registry, get_tracer
 
 __all__ = ["StoreStats", "BlockStore", "MemBlockStore", "MmapBlockStore",
            "CachedBlockStore", "AioBlockStore", "make_store", "BACKENDS",
@@ -106,7 +109,17 @@ class BlockStore:
     """Backend protocol. ``read_rows(rows) -> (ids [G, BLKp], fps [G, BLKp])``
     int32; row indices address the interleaved ``blocks`` section (row 0 is
     the guaranteed-empty spare). ``prefetch(rows)`` is advisory and must not
-    change the logical ``reads`` count."""
+    change the logical ``reads`` count.
+
+    Backends implement ``_read_rows_impl``/``_prefetch_impl``; the public
+    entry points here are the telemetry seam — when tracing is on, every
+    read batch becomes one ``store.read`` span whose ``rows`` attribute is
+    the LEDGER delta (so span sums tie out against measured N_io exactly),
+    and every prefetch a ``store.prefetch`` span on the speculative lane.
+    Live stores feed the metrics registry through a weak-set collector;
+    ``close()`` folds the final ledger into the per-backend retired totals
+    so registry counters stay monotonic across store lifetimes.
+    """
 
     name: str = "base"
     blkp: int
@@ -114,21 +127,108 @@ class BlockStore:
 
     def __init__(self):
         self.stats = StoreStats()
+        self.telemetry_labels: dict = {}
+        self._retired = False
+        _LIVE_STORES.add(self)
 
-    def read_rows(self, rows: np.ndarray):
+    def _read_rows_impl(self, rows: np.ndarray):
         raise NotImplementedError
 
-    def prefetch(self, rows: np.ndarray) -> None:  # advisory; default no-op
+    def _prefetch_impl(self, rows: np.ndarray) -> None:  # advisory no-op
         return None
 
+    def read_rows(self, rows: np.ndarray):
+        tr = get_tracer()
+        if not tr.enabled:
+            return self._read_rows_impl(rows)
+        st = self.stats
+        r0, h0, d0 = st.reads, st.cache_hits, st.device_reads
+        with tr.span("store.read", backend=self.name,
+                     **self.telemetry_labels) as sp:
+            out = self._read_rows_impl(rows)
+            sp.set(rows=st.reads - r0, cache_hits=st.cache_hits - h0,
+                   device_reads=st.device_reads - d0)
+        return out
+
+    def prefetch(self, rows: np.ndarray) -> None:
+        tr = get_tracer()
+        if not tr.enabled:
+            return self._prefetch_impl(rows)
+        p0 = self.stats.prefetch_reads
+        with tr.span("store.prefetch", backend=self.name,
+                     **self.telemetry_labels) as sp:
+            out = self._prefetch_impl(rows)
+            sp.set(rows=self.stats.prefetch_reads - p0)
+        return out
+
     def close(self) -> None:
-        return None
+        _retire_store(self)
 
     def __enter__(self):
         return self
 
     def __exit__(self, *exc):
         self.close()
+
+
+# -- registry glue: live stores + retired ledgers --------------------------
+_LIVE_STORES: "weakref.WeakSet" = weakref.WeakSet()
+_RETIRED_STATS: dict = {}           # (backend, shard) -> StoreStats totals
+_RETIRED_LOCK = threading.Lock()
+
+_STORE_COUNTER_HELP = {
+    "reads": "logical block reads (measured N_io)",
+    "device_reads": "demand reads served by the backing device",
+    "cache_hits": "reads served from the store page cache",
+    "prefetch_reads": "speculative reads on the prefetch lane",
+    "read_batches": "read_rows() batches",
+}
+
+
+def _retire_store(st: "BlockStore") -> None:
+    """Fold a closing store's ledger into the per-backend retired totals
+    (idempotent), so registry counters survive the object."""
+    if getattr(st, "_retired", True):
+        return
+    st._retired = True
+    _LIVE_STORES.discard(st)
+    key = (st.name, st.telemetry_labels.get("shard"))
+    with _RETIRED_LOCK:
+        agg = _RETIRED_STATS.setdefault(key, StoreStats())
+        for f in dataclasses.fields(StoreStats):
+            setattr(agg, f.name,
+                    getattr(agg, f.name) + getattr(st.stats, f.name))
+
+
+def _collect_store_metrics() -> dict:
+    """Registry collector: per-(backend, shard) StoreStats roll-up over
+    live stores + retired totals. The ledgers stay the source of truth —
+    this is a read-only window, so ``reads == device_reads + cache_hits``
+    holds in the registry iff it holds in the ledgers."""
+    with _RETIRED_LOCK:
+        groups = {k: s.snapshot() for k, s in _RETIRED_STATS.items()}
+    for st in list(_LIVE_STORES):
+        key = (st.name, st.telemetry_labels.get("shard"))
+        agg = groups.setdefault(key, StoreStats())
+        snap = st.stats.snapshot()
+        for f in dataclasses.fields(StoreStats):
+            setattr(agg, f.name, getattr(agg, f.name) + getattr(snap, f.name))
+    out = {}
+    for field, help_ in _STORE_COUNTER_HELP.items():
+        samples = []
+        for (backend, shard), agg in sorted(
+                groups.items(), key=lambda kv: (kv[0][0], kv[0][1] or "")):
+            labels = {"backend": backend}
+            if shard is not None:
+                labels["shard"] = shard
+            samples.append(dict(labels=labels, value=getattr(agg, field)))
+        out[f"e2lsh_store_{field}_total"] = dict(
+            type="counter", help=help_, samples=samples)
+    return out
+
+
+get_registry().register_collector(_collect_store_metrics,
+                                  name="storage.blockstore")
 
 
 class MemBlockStore(BlockStore):
@@ -143,7 +243,7 @@ class MemBlockStore(BlockStore):
         self._blocks = np.ascontiguousarray(blocks, dtype=np.int32)
         self.nb, _, self.blkp = blocks.shape
 
-    def read_rows(self, rows):
+    def _read_rows_impl(self, rows):
         rows = np.asarray(rows, dtype=np.int64).ravel()
         out = self._blocks[rows]
         self.stats.reads += int(rows.size)
@@ -177,7 +277,7 @@ class MmapBlockStore(BlockStore):
         except (AttributeError, OSError, ValueError):
             pass
 
-    def read_rows(self, rows):
+    def _read_rows_impl(self, rows):
         rows = np.asarray(rows, dtype=np.int64).ravel()
         out = np.empty((rows.size, 2, self.blkp), dtype=np.int32)
         for i, g in enumerate(rows):        # strictly sequential: QD1
@@ -189,6 +289,7 @@ class MmapBlockStore(BlockStore):
 
     def close(self):
         self._mm = None
+        _retire_store(self)
 
 
 class CachedBlockStore(BlockStore):
@@ -277,7 +378,7 @@ class CachedBlockStore(BlockStore):
         self._ref[s] = True
 
     # -- the protocol -------------------------------------------------------
-    def read_rows(self, rows):
+    def _read_rows_impl(self, rows):
         rows = np.asarray(rows, dtype=np.int64).ravel()
         G = int(rows.size)
         out = np.empty((G, 2, self.blkp), dtype=np.int32)
@@ -300,8 +401,11 @@ class CachedBlockStore(BlockStore):
         got = {}
         for fut in futures:
             got.update(fut.result())
-        for g, fut in waits:             # join in-flight prefetch chunks
-            got[g] = fut.result()[g]
+        if waits:                        # join in-flight prefetch chunks
+            with get_tracer().span("store.prefetch_join", backend=self.name,
+                                   rows=len(waits)):
+                for g, fut in waits:
+                    got[g] = fut.result()[g]
         if got:
             with self._lock:
                 for g in need:
@@ -315,7 +419,7 @@ class CachedBlockStore(BlockStore):
                 self.stats.cache_hits += G
         return out[:, 0], out[:, 1]
 
-    def prefetch(self, rows) -> None:
+    def _prefetch_impl(self, rows) -> None:
         rows = np.unique(np.asarray(rows, dtype=np.int64).ravel())
         if rows.size == 0 or self.cache_rows == 0:
             return
@@ -354,6 +458,7 @@ class CachedBlockStore(BlockStore):
 
     def close(self):
         self._pool.shutdown(wait=True)
+        _retire_store(self)
 
 
 class AioBlockStore(CachedBlockStore):

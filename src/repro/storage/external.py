@@ -33,7 +33,9 @@ measured-vs-replay N_io tie-out lives in tests/test_io_count.py).
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+import weakref
 from functools import partial
 from typing import Optional
 
@@ -47,14 +49,81 @@ from ..core.query import (QueryConfig, QueryResult, _fused_sbuf, _init_state,
                           _pad_min_q, _result_from_state, _update_state)
 from ..kernels.l2_distance.ops import l2_distance_gathered
 from ..kernels.lsh_hash.ops import lsh_hash_all_radii
+from ..telemetry import get_registry, get_tracer
 from .blockstore import BlockStore, StoreStats
 
-__all__ = ["ExternalIndex", "ExternalPlanStats", "RungStats", "external_plan"]
+__all__ = ["ExternalIndex", "ExternalPlanStats", "ExternalPlanTotals",
+           "RungStats", "external_plan"]
 
 _INVALID = np.int32(2**31 - 1)
 
 
 @dataclasses.dataclass
+class ExternalPlanTotals:
+    """ACCUMULATING roll-up of every external-plan call on one index — the
+    concurrency-safe counterpart of ``last_plan_stats`` (which is per-call
+    and overwritten by design): under a BatchQueue every tick's stats fold
+    in here instead of clobbering each other. ``snapshot()``/``since()``
+    bracket a window the way ``StoreStats`` does; the telemetry registry
+    reads these totals live."""
+
+    calls: int = 0
+    queries: int = 0
+    nio_blocks: int = 0             # logical block reads (== io.reads sums)
+    prefetch_rows: int = 0
+    setup_ms: float = 0.0
+    total_ms: float = 0.0
+    fetch_ms: float = 0.0
+    compute_wait_ms: float = 0.0
+    overlap_ms: float = 0.0
+    # per rung POSITION t (bounded by the radius schedule length)
+    rung_blocks: dict = dataclasses.field(default_factory=dict)
+    rung_entered: dict = dataclasses.field(default_factory=dict)
+
+    _SCALARS = ("calls", "queries", "nio_blocks", "prefetch_rows", "setup_ms",
+                "total_ms", "fetch_ms", "compute_wait_ms", "overlap_ms")
+
+    def add(self, ps: "ExternalPlanStats") -> None:
+        self.calls += 1
+        self.queries += ps.queries
+        self.nio_blocks += ps.io.reads
+        self.setup_ms += ps.setup_ms
+        self.total_ms += ps.total_ms
+        for r in ps.rungs:
+            self.prefetch_rows += r.prefetch_rows
+            self.fetch_ms += r.fetch_ms
+            self.compute_wait_ms += r.compute_wait_ms
+            self.overlap_ms += r.overlap_ms
+            self.rung_blocks[r.t] = (self.rung_blocks.get(r.t, 0)
+                                     + r.blocks_fetched)
+            self.rung_entered[r.t] = self.rung_entered.get(r.t, 0) + 1
+
+    def snapshot(self) -> "ExternalPlanTotals":
+        return dataclasses.replace(self, rung_blocks=dict(self.rung_blocks),
+                                   rung_entered=dict(self.rung_entered))
+
+    def since(self, base: "ExternalPlanTotals") -> "ExternalPlanTotals":
+        out = ExternalPlanTotals(**{
+            f: getattr(self, f) - getattr(base, f) for f in self._SCALARS})
+        for name in ("rung_blocks", "rung_entered"):
+            mine, theirs = getattr(self, name), getattr(base, name)
+            d = {t: v - theirs.get(t, 0) for t, v in mine.items()}
+            setattr(out, name, {t: v for t, v in d.items() if v})
+        return out
+
+    def as_dict(self) -> dict:
+        d = {f: getattr(self, f) for f in self._SCALARS}
+        d["rung_blocks"] = dict(self.rung_blocks)
+        d["rung_entered"] = dict(self.rung_entered)
+        return d
+
+
+# totals accumulate under one module lock (ticks already serialize at the
+# queue; this guards direct multi-threaded engine use)
+_TOTALS_LOCK = threading.Lock()
+
+
+@dataclasses.dataclass(eq=False)      # identity semantics: telemetry weak-set
 class ExternalIndex:
     """A spilled index opened for external-memory querying: resident hash
     tables + DRAM tier, block rows behind a :class:`BlockStore`. Built by
@@ -76,6 +145,10 @@ class ExternalIndex:
     path: str
     stats: Optional[IndexStats] = None
     last_plan_stats: Optional["ExternalPlanStats"] = None
+    # the accumulating ledger every external_plan call folds into (never
+    # overwritten — the BatchQueue-safe stat surface; see ExternalPlanTotals)
+    plan_totals: ExternalPlanTotals = dataclasses.field(
+        default_factory=ExternalPlanTotals)
     # chain steps of the NEXT rung pushed into the store's queue while the
     # device fold runs (Eq. 7 overlap). 1 = chain heads only (PR 4
     # behavior); deeper values keep an async backend's queue full across
@@ -85,6 +158,10 @@ class ExternalIndex:
     # external_plan when enabled — the serving queue's cache-warming signal
     collect_row_hist: bool = False
     row_hist: Optional[dict] = None
+
+    def __post_init__(self):
+        self._retired = False
+        _LIVE_EXTERNAL.add(self)
 
     @property
     def backend(self) -> str:
@@ -122,12 +199,84 @@ class ExternalIndex:
 
     def close(self) -> None:
         self.store.close()
+        _retire_external(self)
 
     def __enter__(self):
         return self
 
     def __exit__(self, *exc):
         self.close()
+
+
+# -- registry glue: live indices + retired totals ---------------------------
+_LIVE_EXTERNAL: "weakref.WeakSet" = weakref.WeakSet()
+_RETIRED_TOTALS: dict = {}          # backend -> ExternalPlanTotals
+_RETIRED_EXT_LOCK = threading.Lock()
+
+
+def _retire_external(ext: "ExternalIndex") -> None:
+    if getattr(ext, "_retired", True):
+        return
+    ext._retired = True
+    _LIVE_EXTERNAL.discard(ext)
+    with _RETIRED_EXT_LOCK:
+        agg = _RETIRED_TOTALS.setdefault(ext.backend, ExternalPlanTotals())
+        snap = ext.plan_totals.snapshot()
+        for f in ExternalPlanTotals._SCALARS:
+            setattr(agg, f, getattr(agg, f) + getattr(snap, f))
+        for name in ("rung_blocks", "rung_entered"):
+            mine = getattr(agg, name)
+            for t, v in getattr(snap, name).items():
+                mine[t] = mine.get(t, 0) + v
+
+
+def _collect_external_metrics() -> dict:
+    """Registry collector: the per-backend ExternalPlanTotals roll-up —
+    call/query counts, the fetch/compute/overlap time split of the Eq. 6/7
+    decomposition, and per-rung-position block counts."""
+    with _RETIRED_EXT_LOCK:
+        groups = {b: t.snapshot() for b, t in _RETIRED_TOTALS.items()}
+    for ext in list(_LIVE_EXTERNAL):
+        agg = groups.setdefault(ext.backend, ExternalPlanTotals())
+        with _TOTALS_LOCK:
+            snap = ext.plan_totals.snapshot()
+        for f in ExternalPlanTotals._SCALARS:
+            setattr(agg, f, getattr(agg, f) + getattr(snap, f))
+        for name in ("rung_blocks", "rung_entered"):
+            mine = getattr(agg, name)
+            for t, v in getattr(snap, name).items():
+                mine[t] = mine.get(t, 0) + v
+    helps = dict(
+        calls="external-plan calls",
+        queries="real query rows served by the external plan",
+        nio_blocks="logical block reads (measured N_io)",
+        prefetch_rows="next-rung rows pushed to the cache",
+        setup_ms="device setup + schedule transfer time",
+        total_ms="end-to-end external-plan time",
+        fetch_ms="host chain-walk time (block fetch + filter)",
+        compute_wait_ms="host wait on the device fold after prefetch",
+        overlap_ms="host prefetch time hidden under device compute",
+    )
+    out = {}
+    for f in ExternalPlanTotals._SCALARS:
+        out[f"e2lsh_external_{f}_total"] = dict(
+            type="counter", help=helps[f],
+            samples=[dict(labels={"backend": b}, value=getattr(t, f))
+                     for b, t in sorted(groups.items())])
+    for name, help_ in (("rung_blocks", "block reads per rung position"),
+                        ("rung_entered", "times each rung position ran")):
+        samples = []
+        for b, tot in sorted(groups.items()):
+            for t, v in sorted(getattr(tot, name).items()):
+                samples.append(dict(labels={"backend": b, "t": str(t)},
+                                    value=v))
+        out[f"e2lsh_external_{name}_total"] = dict(
+            type="counter", help=help_, samples=samples)
+    return out
+
+
+get_registry().register_collector(_collect_external_metrics,
+                                  name="storage.external")
 
 
 @dataclasses.dataclass
@@ -310,84 +459,108 @@ def external_plan(ext: ExternalIndex, queries, cfg: QueryConfig,
             "in place)")
     t_start = time.perf_counter()
     io_base = ext.store.stats.snapshot()
-    queries = jnp.asarray(queries)
-    if valid is not None:
-        valid = jnp.asarray(valid, dtype=bool)
-    queries, valid, realQ = _pad_min_q(queries, valid)
-    qdev, qnorm2, cnt_all, head_all, qfp_all = _external_setup_jit(
-        ext.a, ext.b, ext.rm, ext.table_cnt, ext.blocks_head, queries, cfg)
-    # chain-walk plan comes to the host ONCE for the whole schedule
-    cnt_np = np.asarray(cnt_all)
-    head_np = np.asarray(head_all)
-    qfp_np = np.asarray(qfp_all).astype(np.int64)
-    setup_ms = (time.perf_counter() - t_start) * 1e3
+    tracer = get_tracer()
+    root = tracer.begin("plan.external", backend=ext.backend)
+    try:
+        queries = jnp.asarray(queries)
+        if valid is not None:
+            valid = jnp.asarray(valid, dtype=bool)
+        queries, valid, realQ = _pad_min_q(queries, valid)
+        with tracer.span("external.setup"):
+            qdev, qnorm2, cnt_all, head_all, qfp_all = _external_setup_jit(
+                ext.a, ext.b, ext.rm, ext.table_cnt, ext.blocks_head,
+                queries, cfg)
+            # chain-walk plan comes to the host ONCE for the whole schedule
+            cnt_np = np.asarray(cnt_all)
+            head_np = np.asarray(head_all)
+            qfp_np = np.asarray(qfp_all).astype(np.int64)
+        setup_ms = (time.perf_counter() - t_start) * 1e3
 
-    Q = qdev.shape[0]
-    r = len(cfg.radii)
-    sbuf = _fused_sbuf(cfg)
-    state = _init_state(Q, cfg, valid)
-    done_np = np.asarray(state[2])
-    zeros_ps = jnp.zeros((Q, cfg.L), dtype=jnp.int32)
-    rungs = []
-    for t in range(r):
-        if done_np.all():
-            break
-        active_q = ~done_np
-        t0 = time.perf_counter()
-        buf_id, count, blocks_read, nonempty = _walk_rung_host(
-            ext.store, cnt_np[t], head_np[t], qfp_np[t], active_q, cfg,
-            ext.blkp, sbuf,
-            record=ext.record_probe_rows if ext.collect_row_hist else None)
-        t1 = time.perf_counter()
-        probe_sizes_t = (jnp.asarray(np.where(nonempty, cnt_np[t], -1)
-                                     .astype(np.int32))
-                         if cfg.collect_probe_sizes else zeros_ps)
-        # dispatch the fold (async on device) ...
-        state = _external_fold_jit(
-            ext.db, ext.db_norm2, qdev, qnorm2, state,
-            jnp.asarray(buf_id),
-            jnp.asarray(nonempty.sum(axis=1, dtype=np.int32)),
-            jnp.asarray(blocks_read), jnp.asarray(count), probe_sizes_t,
-            jnp.int32(t), jnp.float32((cfg.c * float(cfg.radii[t])) ** 2),
-            cfg)
-        # ... and hide the next rung's chain reads under it (Eq. 7's
-        # overlap): still-active queries' first `prefetch_depth` chain-step
-        # rows go into the store's queue while the distance epilogue
-        # computes. Depth 1 = heads only; deeper keeps an async backend's
-        # device queue full across the rung boundary.
-        n_prefetch = 0
-        if t + 1 < r:
-            nxt = (cnt_np[t + 1] > 0) & active_q[:, None]
-            depth = max(1, int(ext.prefetch_depth))
-            nxt_cnt = cnt_np[t + 1][nxt]
-            nxt_head = head_np[t + 1][nxt]
-            rows = [nxt_head]
-            for j in range(1, min(depth, cfg.max_chain)):
-                deeper = nxt_cnt > j * cfg.block_objs
-                if not deeper.any():
-                    break
-                rows.append(nxt_head[deeper] + j)
-            rows = np.concatenate(rows) if len(rows) > 1 else rows[0]
-            n_prefetch = int(rows.size)
-            if n_prefetch:
-                ext.store.prefetch(rows)
-        t2 = time.perf_counter()
-        done_np = np.asarray(state[2])          # blocks on the device fold
-        t3 = time.perf_counter()
-        rungs.append(RungStats(
-            t=t, active_queries=int(active_q.sum()),
-            blocks_fetched=int(blocks_read.sum()),
-            fetch_ms=(t1 - t0) * 1e3,
-            prefetch_rows=n_prefetch,
-            overlap_ms=(t2 - t1) * 1e3,
-            compute_wait_ms=(t3 - t2) * 1e3,
-        ))
-    res = _result_from_state(state, cfg, valid).slice_rows(0, realQ)
-    ext.last_plan_stats = ExternalPlanStats(
-        backend=ext.backend, queries=realQ, rungs=rungs,
-        io=ext.store.stats.since(io_base),
-        nio_blocks_counted=int(np.asarray(res.nio_blocks).sum()),
-        setup_ms=setup_ms,
-        total_ms=(time.perf_counter() - t_start) * 1e3,
-    )
-    return res
+        Q = qdev.shape[0]
+        r = len(cfg.radii)
+        sbuf = _fused_sbuf(cfg)
+        state = _init_state(Q, cfg, valid)
+        done_np = np.asarray(state[2])
+        zeros_ps = jnp.zeros((Q, cfg.L), dtype=jnp.int32)
+        rungs = []
+        for t in range(r):
+            if done_np.all():
+                break
+            active_q = ~done_np
+            rsp = tracer.begin("external.rung", t=t,
+                               radius=float(cfg.radii[t]),
+                               active=int(active_q.sum()))
+            try:
+                t0 = time.perf_counter()
+                buf_id, count, blocks_read, nonempty = _walk_rung_host(
+                    ext.store, cnt_np[t], head_np[t], qfp_np[t], active_q,
+                    cfg, ext.blkp, sbuf,
+                    record=(ext.record_probe_rows if ext.collect_row_hist
+                            else None))
+                t1 = time.perf_counter()
+                probe_sizes_t = (jnp.asarray(np.where(nonempty, cnt_np[t], -1)
+                                             .astype(np.int32))
+                                 if cfg.collect_probe_sizes else zeros_ps)
+                # dispatch the fold (async on device) ...
+                with tracer.span("external.fold_dispatch", t=t):
+                    state = _external_fold_jit(
+                        ext.db, ext.db_norm2, qdev, qnorm2, state,
+                        jnp.asarray(buf_id),
+                        jnp.asarray(nonempty.sum(axis=1, dtype=np.int32)),
+                        jnp.asarray(blocks_read), jnp.asarray(count),
+                        probe_sizes_t, jnp.int32(t),
+                        jnp.float32((cfg.c * float(cfg.radii[t])) ** 2),
+                        cfg)
+                # ... and hide the next rung's chain reads under it (Eq. 7's
+                # overlap): still-active queries' first `prefetch_depth`
+                # chain-step rows go into the store's queue while the
+                # distance epilogue computes. Depth 1 = heads only; deeper
+                # keeps an async backend's device queue full across the rung
+                # boundary.
+                n_prefetch = 0
+                if t + 1 < r:
+                    nxt = (cnt_np[t + 1] > 0) & active_q[:, None]
+                    depth = max(1, int(ext.prefetch_depth))
+                    nxt_cnt = cnt_np[t + 1][nxt]
+                    nxt_head = head_np[t + 1][nxt]
+                    rows = [nxt_head]
+                    for j in range(1, min(depth, cfg.max_chain)):
+                        deeper = nxt_cnt > j * cfg.block_objs
+                        if not deeper.any():
+                            break
+                        rows.append(nxt_head[deeper] + j)
+                    rows = np.concatenate(rows) if len(rows) > 1 else rows[0]
+                    n_prefetch = int(rows.size)
+                    if n_prefetch:
+                        ext.store.prefetch(rows)
+                t2 = time.perf_counter()
+                with tracer.span("external.fold_wait", t=t):
+                    done_np = np.asarray(state[2])  # blocks on the fold
+                t3 = time.perf_counter()
+                rungs.append(RungStats(
+                    t=t, active_queries=int(active_q.sum()),
+                    blocks_fetched=int(blocks_read.sum()),
+                    fetch_ms=(t1 - t0) * 1e3,
+                    prefetch_rows=n_prefetch,
+                    overlap_ms=(t2 - t1) * 1e3,
+                    compute_wait_ms=(t3 - t2) * 1e3,
+                ))
+            finally:
+                rsp.set(blocks_fetched=int(blocks_read.sum()),
+                        prefetch_rows=n_prefetch)
+                rsp.end()
+        res = _result_from_state(state, cfg, valid).slice_rows(0, realQ)
+        ps = ExternalPlanStats(
+            backend=ext.backend, queries=realQ, rungs=rungs,
+            io=ext.store.stats.since(io_base),
+            nio_blocks_counted=int(np.asarray(res.nio_blocks).sum()),
+            setup_ms=setup_ms,
+            total_ms=(time.perf_counter() - t_start) * 1e3,
+        )
+        ext.last_plan_stats = ps
+        with _TOTALS_LOCK:       # accumulate, never overwrite (queue-safe)
+            ext.plan_totals.add(ps)
+        root.set(queries=realQ, rungs=len(rungs), nio_blocks=ps.io.reads)
+        return res
+    finally:
+        root.end()

@@ -209,7 +209,7 @@ def _time_backend(path, queries, *, backend: str, qd: int, k: int,
             t0 = time.perf_counter()
             res = fn(queries)
             times.append(time.perf_counter() - t0)
-        ps = engine.last_external_stats
+        ps = engine.external.last_plan_stats
         store = ext.store
         best = min(times)
         return dict(

@@ -68,6 +68,12 @@ class StripedBlockStore(BlockStore):
                 raise ValueError(
                     f"shard {s} blkp {st.blkp} != striped blkp {self.blkp}")
         self.name = self.shards[0].name
+        # the stripe itself never lands in the telemetry collector (it is a
+        # view, not a ledger) — instead each shard store exports its own
+        # series under a `shard` label, and Prometheus sums reconstruct the
+        # rolled-up ledger exactly
+        for s, st in enumerate(self.shards):
+            getattr(st, "telemetry_labels", {})["shard"] = str(s)
 
     # -- rolled-up observability -------------------------------------------
     @property
@@ -123,7 +129,7 @@ class StripedBlockStore(BlockStore):
             st.close()
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)     # identity hash: telemetry WeakSet
 class ShardedExternalIndex(ExternalIndex):
     """A sharded spill opened for querying: the plain :class:`ExternalIndex`
     surface (the external plan consumes it unchanged) with the block rows

@@ -340,11 +340,13 @@ class UringBlockStore(CachedBlockStore):
         return [rows]          # one chunk: the ring IS the fan-out
 
     def _read_chunk(self, rows) -> dict:
+        from ..telemetry import get_tracer
         from .format import aligned_extent
 
         out = {}
         rows = np.asarray(rows, dtype=np.int64).ravel()
         stride, align = self._stride, self.align
+        tracer = get_tracer()
         for wave_start in range(0, rows.size, self.qd):
             wave = rows[wave_start:wave_start + self.qd]
             reads, inner = [], []
@@ -355,7 +357,12 @@ class UringBlockStore(CachedBlockStore):
                 reads.append((astart, alen,
                               self._buf_addr + i * self._slot_len))
                 inner.append(off)
-            res = self._ring.read_batch(self._fd, reads)
+            # one span per wave: submit -> complete of ONE io_uring_enter
+            # (recorded on the submitter thread; the rung span that caused
+            # it lives on the caller thread, so the wave is its own root)
+            with tracer.span("uring.wave", n=len(reads), qd=self.qd,
+                             o_direct=self.o_direct):
+                res = self._ring.read_batch(self._fd, reads)
             for i, g in enumerate(wave):
                 need = inner[i] + stride
                 if res[i] < 0:

@@ -1,0 +1,65 @@
+"""Unified telemetry for the query/storage/serving stack (docs/telemetry.md).
+
+One import surface over three pieces:
+
+* :mod:`registry` — process-wide metrics (counters/gauges/histograms with
+  labels, lock-free hot path). The storage/serving/external subsystems
+  register *collectors* over their existing ledgers, so
+  ``telemetry.snapshot()`` unifies the four previously disjoint stat
+  surfaces (``StoreStats``, ``TickStats``, the external plan's rung
+  records, the QoS summary) without changing any pinned ledger semantics.
+* :mod:`trace` — zero-dep span tracer with per-tree sampling, a hard
+  ``REPRO_TELEMETRY=off`` kill switch, and a bounded ring buffer.
+* :mod:`export` / :mod:`http` — Perfetto/chrome-trace + JSONL span
+  exporters, Prometheus text rendering, and the live ``/metrics`` +
+  ``/trace?last=N`` server (``serve.py --metrics-port``).
+
+Quickstart::
+
+    from repro import telemetry
+    telemetry.enable(sampling=1.0)          # tracing on (off by default)
+    ... run queries ...
+    telemetry.export_chrome_trace("trace.json")   # -> ui.perfetto.dev
+    snap = telemetry.snapshot()             # every counter, one dict
+    print(telemetry.render_prometheus(snap))
+"""
+from .export import (export_chrome_trace, export_jsonl, render_prometheus,
+                     spans_to_chrome)
+from .http import MetricsServer
+from .registry import (Counter, DEFAULT_BUCKETS, Gauge, Histogram, Registry,
+                       get_registry)
+from .trace import (NOOP_SPAN, Span, TELEMETRY_ENV, Tracer, get_tracer, span,
+                    telemetry_forced_off)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry", "DEFAULT_BUCKETS",
+    "get_registry", "Span", "Tracer", "get_tracer", "span", "NOOP_SPAN",
+    "TELEMETRY_ENV", "telemetry_forced_off", "MetricsServer",
+    "export_chrome_trace", "export_jsonl", "render_prometheus",
+    "spans_to_chrome", "snapshot", "reset", "enable", "disable",
+]
+
+
+def snapshot() -> dict:
+    """Every metric series in one dict (see Registry.snapshot)."""
+    return get_registry().snapshot()
+
+
+def reset() -> None:
+    """Re-baseline the registry AND clear the tracer's span ring — the
+    per-section isolation the benches use."""
+    get_registry().reset()
+    get_tracer().clear()
+
+
+def enable(*, sampling: float = 1.0, capacity=None,
+           jax_annotations=None) -> Tracer:
+    """Turn span tracing on (``REPRO_TELEMETRY=off`` still wins)."""
+    return get_tracer().configure(enabled=True, sampling=sampling,
+                                  capacity=capacity,
+                                  jax_annotations=jax_annotations)
+
+
+def disable() -> Tracer:
+    """Turn span tracing off (the zero-overhead default)."""
+    return get_tracer().configure(enabled=False)

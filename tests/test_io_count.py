@@ -129,7 +129,7 @@ def test_external_plan_measured_nio_matches_replay(built_index,
     with st.load_external(path, backend="aio", qd=8) as ext:
         engine = SearchEngine(ext)
         res = engine.query(q, k=1, collect_probe_sizes=True)
-        ps = engine.last_external_stats
+        ps = engine.external.last_plan_stats
     replay = nio_for_block_size(np.asarray(res.probe_sizes), s_cap=p.S,
                                 block_bytes=p.block_bytes)
     # per-query: trace replay == runtime counters (same contract as fused)

@@ -212,7 +212,7 @@ def test_sharded_external_matches_fused(storage_index, sharded_spills,
         assert engine.default_plan == "sharded_external"
         out = engine.query(hard_queries, k=3, collect_probe_sizes=True)
         _assert_matches(fused_ref, out, probe_sizes=True)
-        ps = engine.last_external_stats
+        ps = engine.external.last_plan_stats
         assert isinstance(ps, st.ShardedExternalPlanStats)
         assert ps.num_shards == num_shards
         assert len(ps.per_shard) == num_shards
@@ -291,7 +291,7 @@ def test_sharded_measured_nio_matches_replay(storage_index, sharded_spills,
                                   qd=8) as ext:
         engine = SearchEngine(ext)
         res = engine.query(hard_queries, k=1, collect_probe_sizes=True)
-        ps = engine.last_external_stats
+        ps = engine.external.last_plan_stats
     replay = nio_for_block_size(np.asarray(res.probe_sizes), s_cap=p.S,
                                 block_bytes=p.block_bytes)
     np.testing.assert_array_equal(replay, np.asarray(res.nio))

@@ -179,7 +179,7 @@ def test_external_plan_matches_fused(storage_index, spilled, hard_queries,
         assert engine.default_plan == "external"
         out = engine.query(hard_queries, k=3, collect_probe_sizes=True)
         _assert_matches(ref, out, probe_sizes=True)
-        ps = engine.last_external_stats
+        ps = engine.external.last_plan_stats
         # under a forced lane (REPRO_STORE_BACKEND) the env wins; a forced
         # uring lane without io_uring resolves to the documented fallback
         expected = st.store_backend_env() or backend
@@ -259,10 +259,10 @@ def test_aio_cache_hits_on_repeat_queries(storage_index, spilled):
     with st.load_external(spilled, backend="aio", qd=8) as ext:
         engine = SearchEngine(ext)
         first = engine.query(q, k=1)
-        nio1 = engine.last_external_stats.measured_nio_blocks
-        hits1 = engine.last_external_stats.io.cache_hits
+        nio1 = engine.external.last_plan_stats.measured_nio_blocks
+        hits1 = engine.external.last_plan_stats.io.cache_hits
         second = engine.query(q, k=1)
-        ps2 = engine.last_external_stats
+        ps2 = engine.external.last_plan_stats
         assert ps2.measured_nio_blocks == nio1   # logical N_io is identical
         assert ps2.io.cache_hits > hits1         # but served from the cache
         assert ps2.cache_hit_rate > 0.9
